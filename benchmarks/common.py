@@ -1,0 +1,77 @@
+"""Shared benchmark substrate: one cached FP teacher model + calibration /
+eval data, reused by every table benchmark (the paper's Llama-2-7B role is
+played by a 4-layer dense model trained on the synthetic Markov corpus)."""
+from __future__ import annotations
+
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.pipeline import pretrain_fp
+from repro.data import synthetic
+from repro.models.common import ModelConfig
+from repro.train.checkpoint import CheckpointManager
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+CACHE = ROOT / "experiments" / "teacher"
+
+VOCAB, SEQ, BATCH = 512, 64, 16
+
+TEACHER_CFG = ModelConfig(
+    name="bench-teacher", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=VOCAB, act="swiglu", group_size=32,
+    loss_chunk=64,
+)
+
+
+def corpus() -> np.ndarray:
+    return synthetic.markov_corpus(VOCAB, 80_000, seed=0)
+
+
+def get_teacher():
+    """(model_fp, fp_params) — trained once, cached on disk."""
+    from repro.models.model import Model
+
+    model = Model(TEACHER_CFG.replace(mode="fp", quant_bits=0))
+    ck = CheckpointManager(CACHE, keep=1, async_write=False)
+    template = None
+    if ck.latest_step() is not None:
+        import jax
+
+        template = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        import jax.numpy as jnp
+
+        template = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+        params, _ = ck.restore(template)
+        import jax as _jax
+        import jax.numpy as _jnp
+
+        return model, _jax.tree.map(_jnp.asarray, params)
+    tokens = corpus()
+    batches = synthetic.lm_batches(tokens, BATCH, SEQ, steps=300, seed=1)
+    model, params = pretrain_fp(TEACHER_CFG, batches, lr=3e-3)
+    ck.save(1, params)
+    ck.wait()
+    return model, params
+
+
+def calib(n_samples: int = 16):
+    return synthetic.calib_set(corpus(), n_samples=n_samples, seq=SEQ, seed=2)
+
+
+def eval_ppl(cfg, params):
+    from repro.models.model import Model
+
+    return synthetic.eval_ppl(Model(cfg), params, corpus(), BATCH, SEQ)
+
+
+def timed(fn, *args, repeat: int = 1, **kwargs):
+    t0 = time.time()
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    return out, (time.time() - t0) / repeat * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,65 @@
+"""Render the §Roofline markdown table from experiments/dryrun JSONs and
+inject it (plus the §Perf log table) into EXPERIMENTS.md placeholders."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+PERF = ROOT / "experiments" / "perf"
+
+
+def load(d):
+    rows = []
+    for f in sorted(d.glob("**/*.json")):
+        j = json.loads(f.read_text())
+        if "error" not in j:
+            j["_tag"] = f.parent.name if f.parent != DRYRUN else ""
+            rows.append(j)
+    return rows
+
+
+def fmt_row(d):
+    peak = (d.get("peak_bytes_per_device") or 0) / 2**30
+    ts = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+    frac = d["t_compute_s"] / ts if ts else 0
+    u = d.get("useful_flop_ratio")
+    us = f"{u:.3f}" if u is not None else "n/a†"
+    return (
+        f"| {d['arch']} | {d['shape']} | {d['mesh']} | {peak:.1f} | "
+        f"{d['t_compute_s']:.4f} | {d['t_memory_s']:.4f} | {d['t_collective_s']:.4f} | "
+        f"{d['bottleneck']} | {frac:.3f} | {us} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | peak GiB/dev | t_compute s | t_memory s | "
+    "t_collective s | bottleneck | roofline frac | useful/HLO FLOPs |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main():
+    rows = load(DRYRUN)
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    multi = [r for r in rows if r["mesh"] == "2x16x16"]
+    out = ["### Single-pod (16×16, 256 chips) — baseline, all cells", "", HEADER]
+    out += [fmt_row(r) for r in sorted(single, key=lambda r: (r["arch"], r["shape"]))]
+    out += ["", "### Multi-pod (2×16×16, 512 chips)", "", HEADER]
+    out += [fmt_row(r) for r in sorted(multi, key=lambda r: (r["arch"], r["shape"]))]
+    table = "\n".join(out)
+
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    if "<!-- ROOFLINE_TABLE -->" in exp:
+        exp = exp.replace("<!-- ROOFLINE_TABLE -->", table)
+    else:  # idempotent refresh: splice between the section markers
+        start = exp.index("### Single-pod")
+        end = exp.index("## §Perf")
+        exp = exp[:start] + table + "\n\n" + exp[end:]
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print(f"injected {len(single)}+{len(multi)} rows")
+
+
+if __name__ == "__main__":
+    main()

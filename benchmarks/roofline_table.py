@@ -1,0 +1,35 @@
+"""§Roofline aggregation: read every dry-run JSON and emit the roofline
+table (CSV): three terms, bottleneck, useful-FLOP ratio."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main():
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        if "error" in d:
+            common.emit(f"roofline/{f.stem}", 0.0, f"ERROR={d['error'][:80]}")
+            continue
+        rows.append(d)
+        t_step = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+        frac = d["t_compute_s"] / t_step if t_step else 0.0
+        ratio = d.get("useful_flop_ratio")
+        common.emit(
+            f"roofline/{f.stem}",
+            t_step * 1e6,
+            f"bottleneck={d['bottleneck']};t_comp={d['t_compute_s']:.4f};"
+            f"t_mem={d['t_memory_s']:.4f};t_coll={d['t_collective_s']:.4f};"
+            f"roofline_frac={frac:.3f};useful_flops={ratio if ratio is None else round(ratio,3)};"
+            f"peak_GiB={(d.get('peak_bytes_per_device') or 0)/2**30:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

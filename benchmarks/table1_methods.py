@@ -1,0 +1,46 @@
+"""Paper Tables 1-3 (method ladder): FP16 / RTN / GPTQ / Block-AP /
+EfficientQAT (Block-AP + E2E-QP) at 2-bit and 4-bit on the bench teacher.
+Derived: held-out perplexity. The paper's ordering to reproduce:
+   4-bit: everything close to FP;  2-bit: RTN << GPTQ < Block-AP < full."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.block_ap import BlockAPConfig
+from repro.core.e2e_qp import E2EQPConfig
+from repro.core.gptq import gptq_dense_model
+from repro.core.pipeline import efficient_qat, quantize_rtn
+from repro.core.quant import QuantSpec
+from repro.data import synthetic
+
+BCFG = BlockAPConfig(epochs=4, batch_size=4, lr_w=1e-3, lr_q=5e-3)
+ECFG = E2EQPConfig(lr=1e-3, steps=60)
+
+
+def main():
+    model, fp_params = common.get_teacher()
+    cal = common.calib()
+    tokens = common.corpus()
+    common.emit("table1/fp16", 0.0, f"ppl={common.eval_ppl(model.cfg, fp_params):.3f}")
+
+    for bits in (4, 2):
+        group = 32
+        cfg_r, p_r = quantize_rtn(model.cfg, fp_params, bits, group)
+        common.emit(f"table1/rtn_w{bits}", 0.0, f"ppl={common.eval_ppl(cfg_r, p_r):.3f}")
+
+        (cfg_g, p_g), us = common.timed(
+            gptq_dense_model, model, fp_params, cal, QuantSpec(bits, group)
+        )
+        common.emit(f"table1/gptq_w{bits}", us, f"ppl={common.eval_ppl(cfg_g, p_g):.3f}")
+
+        batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=7)
+        (cfg_f, p_f, _), us = common.timed(
+            efficient_qat, model.cfg, fp_params, cal, batches,
+            bits=bits, group=group, bcfg=BCFG, ecfg=ECFG,
+        )
+        common.emit(
+            f"table1/efficientqat_w{bits}", us, f"ppl={common.eval_ppl(cfg_f, p_f):.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

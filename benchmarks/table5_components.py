@@ -1,0 +1,49 @@
+"""Paper Table 5: effectiveness of each component (Block-AP / E2E-QP) at
+w2g32 on the synthetic benchmark teacher. Derived column: held-out ppl."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.block_ap import BlockAPConfig
+from repro.core.e2e_qp import E2EQPConfig
+from repro.core.pipeline import efficient_qat, quantize_rtn, run_block_ap
+from repro.data import synthetic
+
+BITS, GROUP = 2, 32
+BCFG = BlockAPConfig(epochs=4, batch_size=4, lr_w=1e-3, lr_q=5e-3)
+ECFG = E2EQPConfig(lr=1e-3, steps=60)
+
+
+def main():
+    model, fp_params = common.get_teacher()
+    cal = common.calib()
+    tokens = common.corpus()
+    cfg = model.cfg
+
+    ppl_fp = common.eval_ppl(cfg, fp_params)
+    common.emit("table5/fp16", 0.0, f"ppl={ppl_fp:.3f}")
+
+    (cfg_rtn, p_rtn), us = common.timed(quantize_rtn, cfg, fp_params, BITS, GROUP)
+    common.emit("table5/none(RTN)", us, f"ppl={common.eval_ppl(cfg_rtn, p_rtn):.3f}")
+
+    (cfg_b, p_b), us = common.timed(run_block_ap, cfg, fp_params, cal, BITS, GROUP, BCFG)
+    common.emit("table5/block_ap_only", us, f"ppl={common.eval_ppl(cfg_b, p_b):.3f}")
+
+    batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=3)
+    (out), us = common.timed(
+        lambda: efficient_qat(cfg, fp_params, cal, batches, bits=BITS, group=GROUP,
+                              bcfg=BCFG, ecfg=ECFG, skip_block_ap=True)
+    )
+    cfg_e, p_e, _ = out
+    common.emit("table5/e2e_qp_only", us, f"ppl={common.eval_ppl(cfg_e, p_e):.3f}")
+
+    batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=3)
+    (out), us = common.timed(
+        lambda: efficient_qat(cfg, fp_params, cal, batches, bits=BITS, group=GROUP,
+                              bcfg=BCFG, ecfg=ECFG)
+    )
+    cfg_f, p_f, _ = out
+    common.emit("table5/block_ap+e2e_qp", us, f"ppl={common.eval_ppl(cfg_f, p_f):.3f}")
+
+
+if __name__ == "__main__":
+    main()

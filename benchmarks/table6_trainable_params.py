@@ -1,0 +1,44 @@
+"""Paper Table 6: trainable-parameter schemes in block-wise training (w2g32,
+no E2E-QP). Derived: held-out ppl + trainable-param count per block."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core.ablate import VARIANTS
+from repro.core.block_ap import BlockAPConfig
+from repro.core.pipeline import run_block_ap
+from repro.optim import count, partition, path_mask
+from repro.core.ablate import TRAINABLE_LEAVES
+
+BITS, GROUP = 2, 32
+
+
+def main():
+    model, fp_params = common.get_teacher()
+    cal = common.calib()
+    cfg = model.cfg
+    for variant in VARIANTS:
+        bcfg = BlockAPConfig(epochs=4, batch_size=4, lr_w=1e-3, lr_q=5e-3)
+        (cfg_q, p_q), us = common.timed(
+            run_block_ap, cfg, fp_params, cal, BITS, GROUP, bcfg, variant,
+            pack=False,
+        )
+        ppl = common.eval_ppl(cfg_q, p_q)
+        # trainable params of one block under this variant
+        from repro.core.convert import fp_tree_to_fake
+        from repro.models.common import qspec
+
+        fake = fp_tree_to_fake(
+            jax.tree.map(lambda l: l[0], fp_params["layers"]),
+            qspec(cfg_q), variant,
+        )
+        names = TRAINABLE_LEAVES[variant]
+        tr, _ = partition(fake, path_mask(fake, lambda p: p.rsplit("/", 1)[-1] in names))
+        common.emit(
+            f"table6/{variant}", us, f"ppl={ppl:.3f};trainable_per_block={count(tr)}"
+        )
+
+
+if __name__ == "__main__":
+    main()

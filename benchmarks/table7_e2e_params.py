@@ -1,0 +1,36 @@
+"""Paper Table 7: E2E-QP trainable-parameter choice (s / z / s,z) after
+Block-AP, w2g32. Derived: ppl + avg bits/param."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.block_ap import BlockAPConfig
+from repro.core.e2e_qp import E2EQPConfig, run_e2e_qp, prepare_params
+from repro.core.pipeline import run_block_ap
+from repro.core.quant import QuantSpec, avg_bits_per_param
+from repro.data import synthetic
+from repro.models.model import Model
+
+BITS, GROUP = 2, 32
+BCFG = BlockAPConfig(epochs=4, batch_size=4, lr_w=1e-3, lr_q=5e-3)
+
+
+def main():
+    model, fp_params = common.get_teacher()
+    cal = common.calib()
+    tokens = common.corpus()
+    cfg_q, p_q = run_block_ap(model.cfg, fp_params, cal, BITS, GROUP, BCFG)
+    model_q = Model(cfg_q)
+
+    for name, ts, tz in (("s", True, False), ("z", False, True), ("s,z", True, True)):
+        ecfg = E2EQPConfig(lr=1e-3, steps=60, train_s=ts, train_z=tz)
+        batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, 60, seed=4)
+        (params, _), us = common.timed(run_e2e_qp, model_q, p_q, batches, ecfg)
+        ppl = common.eval_ppl(cfg_q, params)
+        bits = avg_bits_per_param(QuantSpec(BITS, GROUP))
+        if tz:  # z promoted to FP16 -> N + (N+16)/g becomes N + (N+16+16-N)/g
+            bits = BITS + (16 + 16) / GROUP
+        common.emit(f"table7/{name}", us, f"ppl={ppl:.3f};avg_bits={bits:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 8: training time & trainable-state footprint of the two
+phases at bench scale. Derived: phase wall time + trainable fraction
+(the memory story: E2E-QP state exists for ~1.6% of params at g=64)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core.block_ap import BlockAPConfig
+from repro.core.e2e_qp import E2EQPConfig, make_step, run_e2e_qp
+from repro.core.pipeline import run_block_ap
+from repro.data import synthetic
+from repro.models.model import Model
+from repro.optim import count, partition, path_mask
+
+
+def main():
+    model, fp_params = common.get_teacher()
+    cal = common.calib()
+    tokens = common.corpus()
+
+    bcfg = BlockAPConfig(epochs=2, batch_size=4, lr_w=1e-3, lr_q=5e-3)
+    (cfg_q, p_q), us_b = common.timed(
+        run_block_ap, model.cfg, fp_params, cal, 2, 32, bcfg
+    )
+    n_total = sum(x.size for x in jax.tree.leaves(p_q))
+    common.emit("table8/block_ap", us_b, f"phase=1")
+
+    ecfg = E2EQPConfig(lr=1e-3, steps=30)
+    model_q = Model(cfg_q)
+    batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, 30, seed=6)
+    (_, log), us_e = common.timed(run_e2e_qp, model_q, p_q, batches, ecfg)
+    split, _, _ = make_step(model_q, ecfg)
+    train_p, _ = split(p_q)
+    frac = count(train_p) / n_total
+    common.emit("table8/e2e_qp", us_e, f"trainable_frac={frac:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Instruction-tuning scenario (paper Sec. 4.2 / Table 4): E2E-QP adapts an
+already-quantized model to a NEW data distribution by training only the step
+sizes — the Q-PEFT use case (PEQA/QA-LoRA competitor).
+
+We emulate the Alpaca shift with a second Markov corpus (different seed =
+different 'domain'); the quantized model's ppl on the new domain drops
+substantially after E2E-QP while the packed 2-bit weights never change.
+
+    PYTHONPATH=src python examples/instruction_tune.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.block_ap import BlockAPConfig
+from repro.core.e2e_qp import E2EQPConfig, run_e2e_qp
+from repro.core.pipeline import pretrain_fp, run_block_ap
+from repro.data import synthetic
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+
+CFG = ModelConfig(
+    name="itune", family="dense", n_layers=2, d_model=96, n_heads=4,
+    n_kv_heads=2, d_ff=192, vocab=256, act="swiglu", loss_chunk=64,
+)
+
+
+def main():
+    pretrain_corpus = synthetic.markov_corpus(CFG.vocab, 60_000, seed=0)
+    task_corpus = synthetic.markov_corpus(CFG.vocab, 60_000, seed=42)  # "Alpaca"
+
+    print("base model: pretrain FP + Block-AP 2-bit quantization...")
+    model_fp, fp_params = pretrain_fp(
+        CFG, synthetic.lm_batches(pretrain_corpus, 8, 64, steps=150, seed=1), lr=3e-3
+    )
+    calib = synthetic.calib_set(pretrain_corpus, 16, 64, seed=2)
+    cfg_q, q_params = run_block_ap(
+        CFG, fp_params, calib, 2, 32,
+        BlockAPConfig(epochs=4, batch_size=4, lr_w=1e-3, lr_q=5e-3),
+    )
+    model_q = Model(cfg_q)
+
+    ppl_before = synthetic.eval_ppl(model_q, q_params, task_corpus, 8, 64)
+    print(f"quantized model on the new task BEFORE E2E-QP: ppl={ppl_before:.3f}")
+
+    print("instruction-tuning via E2E-QP (step sizes only)...")
+    tuned, log = run_e2e_qp(
+        model_q, q_params,
+        synthetic.lm_batches(task_corpus, 8, 64, steps=120, seed=3),
+        E2EQPConfig(lr=2e-3, steps=120),
+    )
+    ppl_after = synthetic.eval_ppl(model_q, tuned, task_corpus, 8, 64)
+    print(f"quantized model on the new task AFTER  E2E-QP: ppl={ppl_after:.3f}")
+    # packed weights untouched:
+    import numpy as np
+    import jax
+
+    same = jax.tree_util.tree_all(jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all())
+        if a.dtype == "uint32" else True,
+        q_params, tuned,
+    ))
+    assert same, "packed integer weights must not change during E2E-QP"
+    assert ppl_after < ppl_before
+    print("task adaptation achieved with frozen 2-bit weights. ✓")
+
+
+if __name__ == "__main__":
+    main()

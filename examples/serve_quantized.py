@@ -1,0 +1,54 @@
+"""End-to-end serving driver: quantize a small LM to 2-bit and serve BATCHED
+requests through the continuous-batching engine (packed weights, KV-cache
+decode). This is the deployment story of the paper (uniform quantization ->
+simple fused dequant kernels).
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.pipeline import pretrain_fp, quantize_rtn
+from repro.data import synthetic
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+
+CFG = ModelConfig(
+    name="serve-demo", family="dense", n_layers=2, d_model=96, n_heads=4,
+    n_kv_heads=2, d_ff=192, vocab=256, act="swiglu", loss_chunk=64,
+)
+
+
+def main():
+    tokens = synthetic.markov_corpus(CFG.vocab, 40_000, seed=0)
+    print("training + quantizing a small LM (w4g32)...")
+    model_fp, fp_params = pretrain_fp(
+        CFG, synthetic.lm_batches(tokens, 8, 64, steps=120, seed=1), lr=3e-3
+    )
+    cfg_q, q_params = quantize_rtn(CFG, fp_params, bits=4, group=32)
+    model = Model(cfg_q)
+
+    engine = Engine(model, q_params, slots=4, max_len=128)
+    rng = np.random.default_rng(0)
+    reqs = []
+    print("submitting 8 batched requests to 4 slots (continuous batching)...")
+    for rid in range(8):
+        start = int(rng.integers(0, 30_000))
+        prompt = tokens[start : start + 12].astype(np.int32)
+        req = Request(rid=rid, prompt=prompt, max_new=12)
+        reqs.append(req)
+        engine.submit(req)
+
+    engine.run(max_ticks=200)
+    for req in reqs:
+        assert req.done and len(req.out) == 12
+        print(f"  req {req.rid}: prompt={req.prompt[:6].tolist()}... -> {req.out}")
+    print("all requests served from 4 cache slots. ✓")
+
+
+if __name__ == "__main__":
+    main()

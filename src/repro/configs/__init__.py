@@ -1,0 +1,44 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+Llama-2 targets). ``get_config(name)`` returns the FULL production config;
+``get_config(name, smoke=True)`` the reduced same-family smoke config."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "yi_6b",
+    "qwen1_5_4b",
+    "nemotron_4_340b",
+    "stablelm_3b",
+    "phi3_5_moe",
+    "dbrx_132b",
+    "seamless_m4t_v2",
+    "xlstm_1_3b",
+    "llama3_2_vision_90b",
+    "jamba_v0_1",
+    "llama2_7b",  # the paper's primary subject
+]
+
+_ALIASES = {
+    "yi-6b": "yi_6b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "stablelm-3b": "stablelm_3b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "dbrx-132b": "dbrx_132b",
+    "seamless-m4t-large-v2": "seamless_m4t_v2",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "jamba-v0.1-52b": "jamba_v0_1",
+    "llama-2-7b": "llama2_7b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str, *, smoke: bool = False, **overrides):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    cfg = mod.SMOKE if smoke else mod.FULL
+    return cfg.replace(**overrides) if overrides else cfg

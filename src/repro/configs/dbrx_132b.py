@@ -1,0 +1,15 @@
+"""DBRX-132B — fine-grained MoE, 16 experts top-4 [hf:databricks/dbrx-base]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="dbrx-132b", family="moe", n_layers=40, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=10752, vocab=100352, act="swiglu",
+    n_experts=16, top_k=4,
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="dbrx-smoke", family="moe", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, act="swiglu", n_experts=4, top_k=4,
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

@@ -1,0 +1,19 @@
+"""Jamba-v0.1 (52B) — Mamba:attention 7:1 interleave, MoE (16e top-2) every
+other layer [arXiv:2403.19887]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="jamba-v0.1", family="hybrid", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=14336, vocab=65536, act="swiglu",
+    n_experts=16, top_k=2, attn_every=8, attn_offset=4, moe_every=2,
+    mamba_d_state=16, mamba_expand=2, mamba_d_conv=4,
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke", family="hybrid", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, act="swiglu",
+    n_experts=4, top_k=2, attn_every=4, attn_offset=2, moe_every=2,
+    mamba_d_state=8, mamba_expand=2, mamba_d_conv=4, mamba_dt_rank=32,
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

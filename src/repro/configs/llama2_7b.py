@@ -1,0 +1,14 @@
+"""Llama-2-7B — the paper's primary experimental subject (Tables 1-12)."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="llama-2-7b", family="dense", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=32, d_ff=11008, vocab=32000, act="swiglu",
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="llama2-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab=512, act="swiglu",
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

@@ -1,0 +1,18 @@
+"""Llama-3.2-Vision-90B language backbone — cross-attention image layers
+every 5th layer; vision tower is a stub (precomputed patch embeddings)
+[hf:meta-llama/Llama-3.2-*-Vision]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm", n_layers=100, d_model=8192,
+    n_heads=64, n_kv_heads=8, d_ff=28672, vocab=128256, act="swiglu",
+    cross_attn_every=5, n_vision_tokens=6400, d_vision=7680,
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="llama-vision-smoke", family="vlm", n_layers=4, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=256, vocab=512, act="swiglu",
+    cross_attn_every=2, n_vision_tokens=16, d_vision=64,
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

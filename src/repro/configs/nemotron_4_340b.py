@@ -1,0 +1,14 @@
+"""Nemotron-4-340B — dense GQA, squared-ReLU FFN [arXiv:2402.16819]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="nemotron-4-340b", family="dense", n_layers=96, d_model=18432,
+    n_heads=96, n_kv_heads=8, d_ff=73728, vocab=256000, head_dim=192,
+    act="sq_relu", quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="nemotron-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, head_dim=32, act="sq_relu",
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

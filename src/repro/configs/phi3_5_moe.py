@@ -1,0 +1,16 @@
+"""Phi-3.5-MoE (42B total / 6.6B active) — 16 experts, top-2
+[hf:microsoft/Phi-3.5-MoE-instruct]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="phi3.5-moe", family="moe", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=6400, vocab=32064, act="swiglu",
+    n_experts=16, top_k=2,
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-moe-smoke", family="moe", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, act="swiglu", n_experts=4, top_k=2,
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

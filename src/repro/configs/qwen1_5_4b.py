@@ -1,0 +1,14 @@
+"""Qwen1.5-4B — dense MHA decoder with QKV bias [hf:Qwen/Qwen1.5 family]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen1.5-4b", family="dense", n_layers=40, d_model=2560, n_heads=20,
+    n_kv_heads=20, d_ff=6912, vocab=151936, act="swiglu", qkv_bias=True,
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-4b-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab=512, act="swiglu", qkv_bias=True,
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

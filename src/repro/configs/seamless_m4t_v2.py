@@ -1,0 +1,18 @@
+"""SeamlessM4T-large-v2 transformer backbone — encoder-decoder; the speech
+frontend is a stub (precomputed frame embeddings) per task spec
+[arXiv:2308.11596]. "24L" is realised as 24 encoder + 24 decoder layers."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="seamless-m4t-v2", family="encdec", n_layers=24, n_enc_layers=24,
+    n_dec_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab=256206, d_frontend=1024, act="gelu",
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="seamless-smoke", family="encdec", n_layers=2, n_enc_layers=2,
+    n_dec_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256, vocab=512,
+    d_frontend=64, act="gelu",
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

@@ -1,0 +1,105 @@
+"""Assigned input-shape set and per-(arch x shape) input construction.
+
+Four LM shapes (seq_len x global_batch):
+  train_4k     4,096 x 256   -> lowers train_step (E2E-QP by default)
+  prefill_32k 32,768 x 32    -> lowers prefill
+  decode_32k  32,768 x 128   -> lowers serve_step (1 token, full KV cache)
+  long_500k  524,288 x 1     -> serve_step; SSM/hybrid only (sub-quadratic)
+
+``long_500k`` is skipped for pure full-attention archs (quadratic attention
+at 524k is not runnable — recorded in DESIGN.md §5); encoder-decoder archs
+have a decoder, so decode shapes run with src_len = seq/2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.family in SUBQUADRATIC_FAMILIES
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, scale: float = 1.0) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``scale`` < 1 shrinks batch/seq for reduced-mesh tests (kept divisible).
+    Returns {'batch': ...} for train, {'batch': ...} for prefill,
+    {'tokens','pos','cache'} for decode.
+    """
+    sh = SHAPES[shape_name]
+    b = max(int(sh.batch * scale), 1)
+    s = sh.seq
+    model = Model(cfg)
+
+    if sh.kind == "train":
+        if cfg.family == "encdec":
+            half = s // 2
+            batch = {
+                "frames": _sds((b, half, cfg.d_frontend), jnp.bfloat16),
+                "tokens": _sds((b, half), jnp.int32),
+                "labels": _sds((b, half), jnp.int32),
+            }
+        elif cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+                "patches": _sds((b, cfg.n_vision_tokens, cfg.d_vision), jnp.bfloat16),
+            }
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+        return {"batch": batch}
+
+    if sh.kind == "prefill":
+        if cfg.family == "encdec":
+            half = s // 2
+            batch = {
+                "frames": _sds((b, half, cfg.d_frontend), jnp.bfloat16),
+                "tokens": _sds((b, half), jnp.int32),
+            }
+        elif cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s), jnp.int32),
+                "patches": _sds((b, cfg.n_vision_tokens, cfg.d_vision), jnp.bfloat16),
+            }
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32)}
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len cache
+    src_len = s // 2 if cfg.family == "encdec" else cfg.n_vision_tokens
+    cache = jax.eval_shape(lambda: Model(cfg).init_cache(b, s, src_len=src_len))
+    return {
+        "tokens": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache,
+    }

@@ -1,0 +1,14 @@
+"""StableLM-3B — dense MHA decoder [hf:stabilityai/stablelm family]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="stablelm-3b", family="dense", n_layers=32, d_model=2560, n_heads=32,
+    n_kv_heads=32, d_ff=6912, vocab=50304, head_dim=80, act="swiglu",
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab=512, head_dim=32, act="swiglu",
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

@@ -1,0 +1,15 @@
+"""xLSTM-1.3B — 7:1 mLSTM:sLSTM blocks [arXiv:2405.04517]. d_ff=0: the
+recurrent blocks carry their own projections."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="xlstm-1.3b", family="ssm", n_layers=48, d_model=2048, n_heads=4,
+    n_kv_heads=4, d_ff=0, vocab=50304, slstm_every=8,
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke", family="ssm", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=0, vocab=512, slstm_every=2,
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

@@ -1,0 +1,14 @@
+"""Yi-6B — llama-arch dense GQA decoder [arXiv:2403.04652]."""
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-6b", family="dense", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=4, d_ff=11008, vocab=64000, act="swiglu",
+    quant_bits=2, group_size=64, mode="quantized",
+)
+
+SMOKE = ModelConfig(
+    name="yi-6b-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, act="swiglu",
+    quant_bits=2, group_size=32, mode="quantized", loss_chunk=64,
+)

@@ -1,0 +1,77 @@
+"""Block-wise-training trainable-parameter variants (paper Table 6).
+
+The paper's claim: simply training (s, z, W) beats the intricate
+partial-training schemes of prior work. We reproduce every row:
+
+  variant     trains            scheme
+  ---------   ---------------   --------------------------------------------
+  'clip'      c                 OmniQuant-style learned clipping: s_eff = c·s0
+  'sz'        s, z              LSQ/CBQ-style step-size (+offset) training
+  'round'     r                 AdaRound/BRECQ rectified-sigmoid rounding
+  'szround'   s, z, r           AutoRound-style (rounding + quant params)
+  'szW'       s, z, W           ours — Block-AP (paper Sec. 3.2)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec, fake_quant, group_reshape, group_unreshape
+
+VARIANTS = ("clip", "sz", "round", "szround", "szW")
+
+# leaf names trainable per variant (everything else in the block is frozen
+# for partial-training variants; 'szW' also trains plain weights & norms).
+TRAINABLE_LEAVES = {
+    "clip": ("c",),
+    "sz": ("s", "z"),
+    "round": ("r",),
+    "szround": ("s", "z", "r"),
+    "szW": ("w", "s", "z", "scale", "b", "conv_w", "conv_b", "A_log", "D", "rec", "bias", "router"),
+}
+
+
+def add_variant_params(p: dict, spec: QuantSpec, variant: str) -> dict:
+    """Augment a fake-quant qlinear param dict with variant-specific leaves."""
+    out = dict(p)
+    if variant == "clip":
+        out["c"] = jnp.ones_like(p["s"])
+    if variant in ("round", "szround"):
+        out["r"] = jnp.zeros_like(p["w"])  # rectified-sigmoid logits
+    return out
+
+
+def _h(r: jax.Array) -> jax.Array:
+    """AdaRound rectified sigmoid: h(r) in [0, 1]."""
+    return jnp.clip(1.2 * jax.nn.sigmoid(r) - 0.1, 0.0, 1.0)
+
+
+def variant_weight(p: dict, spec: QuantSpec, variant: str) -> jax.Array:
+    """Effective fake-quantized weight under the given trainable scheme."""
+    w, s, z = p["w"], p["s"], p["z"]
+    if variant == "szW":
+        return fake_quant(w, s, z, spec)
+    if variant == "sz":
+        return fake_quant(jax.lax.stop_gradient(w), s, z, spec)
+    if variant == "clip":
+        # positive multiplicative clip factor, =1 at init (c0 = 1)
+        s_eff = jax.lax.stop_gradient(s) * jax.nn.softplus(p["c"]) / jax.nn.softplus(1.0)
+        return fake_quant(
+            jax.lax.stop_gradient(w), s_eff, jax.lax.stop_gradient(z), spec
+        )
+    if variant in ("round", "szround"):
+        if variant == "round":
+            s, z = jax.lax.stop_gradient(s), jax.lax.stop_gradient(z)
+        wg = group_reshape(jax.lax.stop_gradient(w), spec.group_size).astype(jnp.float32)
+        rg = group_reshape(p["r"], spec.group_size)
+        q = jnp.floor(wg / s) + _h(rg) + z
+        q = jnp.clip(q, 0.0, float(spec.qmax))
+        return group_unreshape((q - z) * s).astype(w.dtype)
+    raise ValueError(variant)
+
+
+def variant_param_count(p: dict, variant: str) -> int:
+    """# trainable scalars in one qlinear under the variant (Table 6 col 2)."""
+    names = {"clip": ["c"], "sz": ["s", "z"], "round": ["r"],
+             "szround": ["s", "z", "r"], "szW": ["w", "s", "z"]}[variant]
+    return sum(int(jnp.size(p[n])) for n in names if n in p)

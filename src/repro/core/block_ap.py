@@ -1,0 +1,190 @@
+"""Block-AP: block-wise training of ALL parameters (paper Sec. 3.2).
+
+Sequential per-period reconstruction: the FP teacher provides per-period
+targets; each period of the fake-quant student is trained (W, s, z by
+default — or any Table-6 variant) to minimise MSE against its FP output,
+with the student's *input* stream coming from the already-quantized
+predecessors (BRECQ-style propagation). Two LR groups: weights at ``lr_w``,
+quantization parameters at ``lr_q`` (paper Sec. 4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ablate import TRAINABLE_LEAVES
+from repro.core.convert import fp_tree_to_fake
+from repro.models.common import ModelConfig, embed, qspec
+from repro.models.model import Model, apply_period
+from repro.optim import adamw, apply_updates, merge, partition, path_mask
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockAPConfig:
+    epochs: int = 2
+    batch_size: int = 2
+    lr_w: float = 2e-5  # paper: 2e-5 @ 2-bit, 1e-5 @ 3/4-bit
+    lr_q: float = 1e-4
+    clip_norm: float = 1.0
+
+
+def _tree_idx(tree: Params, i: int) -> Params:
+    return jax.tree.map(lambda l: l[i], tree)
+
+
+def _tree_set(tree: Params, i: int, sub: Params) -> Params:
+    return jax.tree.map(lambda l, s: l.at[i].set(s.astype(l.dtype)), tree, sub)
+
+
+def _collect_targets(layers, layout, cfg, h0, kv_src, causal):
+    """FP teacher pass: outputs after every period, stacked (P, N, S, d)."""
+
+    def body(h, slot):
+        h, _, _ = apply_period(slot, layout, cfg, h, kv_src=kv_src, causal=causal)
+        return h, h
+
+    _, outs = jax.lax.scan(body, h0, layers)
+    return outs
+
+
+def _stacks(model: Model, params: Params, batch: dict):
+    """Yield (stack_key, layout, h0, kv_src, causal) per quantizable stack."""
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        src = batch["frames"].astype(cfg.dtype) @ params["frontend"]["w"].astype(cfg.dtype)
+        yield "enc", model.enc_layout, src, None, False
+        # decoder handled by caller after the encoder is quantized
+    else:
+        h0 = embed(params["embed"], batch["tokens"], cfg.dtype)
+        kv = model._kv_src(params, batch)
+        yield "layers", model.layout, h0, kv, True
+
+
+def _trainable_pred(variant: str):
+    names = TRAINABLE_LEAVES[variant]
+
+    def pred(path: str) -> bool:
+        return path.rsplit("/", 1)[-1] in names
+
+    return pred
+
+
+def block_ap(
+    model_fp: Model,
+    fp_params: Params,
+    cfg_q: ModelConfig,
+    calib: dict,
+    bcfg: BlockAPConfig = BlockAPConfig(),
+) -> tuple[Params, dict]:
+    """Returns (params in fake_quant mode with trained (W, s, z), stats).
+
+    ``cfg_q`` must be the fake_quant twin of ``model_fp.cfg``
+    (same arch, mode='fake_quant', quant_bits set).
+    ``calib``: full calibration batch dict, leading axis = #samples.
+    """
+    assert cfg_q.mode == "fake_quant"
+    spec = qspec(cfg_q)
+    variant = cfg_q.fq_variant
+    cfg_fp = model_fp.cfg
+    model_q = Model(cfg_q)
+
+    out_params = dict(fp_params)
+    stats: dict[str, list] = {"recon_loss": []}
+
+    def train_stack(stack_key, layout, h0, kv_src, causal):
+        fp_layers = fp_params[stack_key]
+        targets = _collect_targets(fp_layers, layout, cfg_fp, h0, kv_src, causal)
+        q_layers = fp_tree_to_fake(fp_layers, spec, variant)
+        n_periods = targets.shape[0]
+        n_samples = h0.shape[0]
+        bs = min(bcfg.batch_size, n_samples)
+
+        pred = _trainable_pred(variant)
+
+        def recon_loss(train_p, frozen_p, h_in, tgt, kv):
+            slot = merge(train_p, frozen_p)
+            out, _, _ = apply_period(slot, layout, cfg_q, h_in, kv_src=kv, causal=causal)
+            return jnp.mean(
+                jnp.square(out.astype(jnp.float32) - tgt.astype(jnp.float32))
+            )
+
+        sample_slot = _tree_idx(q_layers, 0)
+        mask = path_mask(sample_slot, pred)
+        lr_scales_t, _ = partition(
+            jax.tree.map(
+                lambda _: 1.0, sample_slot
+            ),
+            mask,
+        )
+        # weights learn at lr_w; everything else trainable learns at lr_q
+        lr_scales_t = jax.tree_util.tree_map_with_path(
+            lambda p, v: (bcfg.lr_w / bcfg.lr_q)
+            if v is not None and str(getattr(p[-1], "key", "")) == "w"
+            else v,
+            lr_scales_t,
+            is_leaf=lambda x: x is None,
+        )
+        opt = adamw(bcfg.lr_q, lr_scales=lr_scales_t, clip_norm=bcfg.clip_norm)
+
+        @jax.jit
+        def train_step(train_p, frozen_p, opt_state, h_in, tgt, kv):
+            loss, grads = jax.value_and_grad(recon_loss)(train_p, frozen_p, h_in, tgt, kv)
+            updates, opt_state = opt.update(grads, opt_state, train_p)
+            return apply_updates(train_p, updates), opt_state, loss
+
+        @jax.jit
+        def forward_full(slot, h_in, kv):
+            out, _, _ = apply_period(slot, layout, cfg_q, h_in, kv_src=kv, causal=causal)
+            return out
+
+        h_cur = h0
+        for p_idx in range(n_periods):
+            slot = _tree_idx(q_layers, p_idx)
+            train_p, frozen_p = partition(slot, path_mask(slot, pred))
+            opt_state = opt.init(train_p)
+            last = None
+            for _ in range(bcfg.epochs):
+                for start in range(0, n_samples - bs + 1, bs):
+                    sl = slice(start, start + bs)
+                    kv = None if kv_src is None else kv_src[sl]
+                    train_p, opt_state, last = train_step(
+                        train_p, frozen_p, opt_state, h_cur[sl], targets[p_idx][sl], kv
+                    )
+            slot = merge(train_p, frozen_p)
+            q_layers = _tree_set(q_layers, p_idx, slot)
+            stats["recon_loss"].append(float(last))
+            h_cur = forward_full(slot, h_cur, kv_src)
+        out_params[stack_key] = q_layers
+        return h_cur
+
+    for stack_key, layout, h0, kv_src, causal in _stacks(model_fp, fp_params, calib):
+        enc_out = train_stack(stack_key, layout, h0, kv_src, causal)
+
+    if cfg_fp.family == "encdec":
+        # decoder: cross-attends the *quantized* encoder's output
+        h0 = embed(fp_params["embed"], calib["tokens"], cfg_fp.dtype)
+        # recompute enc_out with quantized encoder params under cfg_q
+        enc_params_q = out_params["enc"]
+        src = calib["frames"].astype(cfg_fp.dtype) @ fp_params["frontend"]["w"].astype(cfg_fp.dtype)
+
+        def enc_body(h, slot):
+            h, _, _ = apply_period(slot, model_fp.enc_layout, cfg_q, h, causal=False)
+            return h, None
+
+        enc_out, _ = jax.lax.scan(enc_body, src, enc_params_q)
+        from repro.models.common import rmsnorm
+
+        enc_out = rmsnorm(fp_params["enc_norm"], enc_out, cfg_fp.norm_eps)
+
+        def dec_gen():
+            yield "dec", model_fp.dec_layout, h0, enc_out, True
+
+        for stack_key, layout, hh, kv, causal in dec_gen():
+            train_stack(stack_key, layout, hh, kv, causal)
+
+    return out_params, stats

@@ -1,0 +1,94 @@
+"""Structural conversion of whole-model parameter trees between quantization
+modes: fp -> fake_quant (Block-AP entry) and fake_quant -> quantized
+(E2E-QP entry / RTN baseline).
+
+A node is treated as a quantizable linear iff it is a dict holding a rank>=2
+'w' leaf and its path is not excluded (embeddings, modality frontends and
+routers stay FP — paper Appendix E quantizes only transformer-block linears).
+Stacked leading axes (scan periods, MoE experts) are handled by repeated vmap.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.nn
+
+from repro.core.ablate import add_variant_params
+from repro.core.qlinear import fake_to_quantized, fp_to_fake
+from repro.core.quant import QuantSpec
+
+EXCLUDE = re.compile(r"(embed|frontend|projector|router)")
+
+
+def _is_qlinear(node: Any, path: str) -> bool:
+    return (
+        isinstance(node, dict)
+        and "w" in node
+        and hasattr(node["w"], "ndim")
+        and node["w"].ndim >= 2
+        and not EXCLUDE.search(path)
+    )
+
+
+def _vmap_n(fn, n: int):
+    for _ in range(n):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def _map_qlinears(params: Any, fn, path: str = "") -> Any:
+    if isinstance(params, dict):
+        if _is_qlinear(params, path):
+            lead = params["w"].ndim - 2
+            return _vmap_n(fn, lead)(params)
+        return {k: _map_qlinears(v, fn, f"{path}/{k}") for k, v in params.items()}
+    return params
+
+
+def fp_tree_to_fake(params: Any, spec: QuantSpec, variant: str = "szW") -> Any:
+    def one(p):
+        q = fp_to_fake(p, spec)
+        return add_variant_params(q, spec, variant)
+
+    return _map_qlinears(params, one)
+
+
+def fake_tree_to_quantized(params: Any, spec: QuantSpec, variant: str = "szW") -> Any:
+    """Pack fake-quant params to integers, honouring the trainable scheme:
+    'clip' folds the trained clip factor into s; 'round'/'szround' commit the
+    trained rounding decisions (h(r) >= 0.5 -> round up)."""
+    import jax.numpy as jnp
+
+    from repro.core import packing
+    from repro.core.ablate import _h
+    from repro.core.quant import group_reshape, group_unreshape
+
+    def one(p):
+        w, s, z = p["w"], p["s"], p["z"]
+        if variant == "clip":
+            s = s * jax.nn.softplus(p["c"]) / jax.nn.softplus(1.0)
+        if variant in ("round", "szround"):
+            wg = group_reshape(w, spec.group_size).astype(jnp.float32)
+            rg = group_reshape(p["r"], spec.group_size)
+            up = jnp.round(_h(rg))  # commit the learned rounding direction
+            codes = jnp.clip(jnp.floor(wg / s) + up + jnp.round(z), 0, spec.qmax)
+            out = {
+                "w_packed": packing.pack(
+                    group_unreshape(codes.astype(jnp.int32)), spec.bits, axis=0
+                ),
+                "s": s.astype(jnp.float32),
+                "zq": jnp.round(z).astype(jnp.int32),
+            }
+            if "b" in p:
+                out["b"] = p["b"]
+            return out
+        return fake_to_quantized({"w": w, "s": s, "z": z, **({"b": p["b"]} if "b" in p else {})}, spec)
+
+    return _map_qlinears(params, one)
+
+
+def rtn_tree(params: Any, spec: QuantSpec) -> Any:
+    """RTN baseline: min/max init + round, no training (paper Tables 1-3)."""
+    return fake_tree_to_quantized(fp_tree_to_fake(params, spec), spec)

@@ -1,0 +1,160 @@
+"""GPTQ baseline (Frantar et al., 2022) — per-linear second-order weight
+quantization with error feedback, used as the PTQ comparison point in the
+paper's Tables 1-3. NumPy implementation (runs at calibration scale on host).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.quant import QuantSpec
+
+
+def gptq_quantize(
+    w: np.ndarray, hessian: np.ndarray, spec: QuantSpec, percdamp: float = 0.01
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """w: (in, out); hessian: (in, in) = X^T X over calibration activations.
+    Returns (codes (G,g,out) int32, s (G,1,out), z (G,1,out))."""
+    w = np.array(w, np.float64)
+    k, n = w.shape
+    g = k if spec.group_size == -1 else spec.group_size
+    qmax = spec.qmax
+
+    h = np.array(hessian, np.float64)
+    diag = np.diag(h).copy()
+    dead = diag == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    h += np.eye(k) * percdamp * np.mean(diag[~dead] if (~dead).any() else 1.0)
+
+    # standard GPTQ: work with the inverse-Hessian Cholesky (upper)
+    hinv = np.linalg.cholesky(np.linalg.inv(h), upper=True)
+
+    codes = np.zeros((k, n), np.int32)
+    s_all = np.zeros((k // g, 1, n))
+    z_all = np.zeros((k // g, 1, n))
+
+    for i in range(k):
+        gi = i // g
+        if i % g == 0:  # (re)fit quant grid on the *current* (updated) block
+            blk = w[i : i + g]
+            wmax, wmin = blk.max(axis=0), blk.min(axis=0)
+            rng = np.maximum(wmax - wmin, 1e-5)
+            s = rng / qmax
+            z = np.clip(np.round(-wmin / s), 0, qmax)
+            s_all[gi, 0], z_all[gi, 0] = s, z
+        s, z = s_all[gi, 0], z_all[gi, 0]
+        q = np.clip(np.round(w[i] / s) + z, 0, qmax)
+        codes[i] = q.astype(np.int32)
+        wq = (q - z) * s
+        err = (w[i] - wq) / hinv[i, i]
+        if i + 1 < k:
+            w[i + 1 :] -= np.outer(hinv[i, i + 1 :], err)
+
+    return (
+        codes.reshape(k // g, g, n),
+        s_all.astype(np.float32),
+        z_all.astype(np.float32),
+    )
+
+
+def hessian_from_acts(x: np.ndarray) -> np.ndarray:
+    """x: (..., in) calibration inputs to the linear -> (in, in)."""
+    x2 = x.reshape(-1, x.shape[-1]).astype(np.float64)
+    return x2.T @ x2
+
+
+# ---------------------------------------------------------------------------
+# Whole-model GPTQ driver for the dense (llama-style) family: captures each
+# linear's calibration inputs block-by-block with BRECQ-style propagation
+# (each block sees the outputs of the already-quantized predecessors).
+# ---------------------------------------------------------------------------
+
+
+def gptq_dense_model(model_fp, fp_params, calib_batch, spec):
+    """Returns params in quantized mode for a dense/swiglu decoder."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import packing
+    from repro.core.qlinear import apply_linear
+    from repro.models import attention as attn_mod
+    from repro.models.common import embed, rmsnorm
+    from repro.models.model import apply_period
+
+    cfg = model_fp.cfg
+    assert cfg.family == "dense" and cfg.act == "swiglu", "GPTQ driver: dense/swiglu"
+    h_heads, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cfg_q = cfg.replace(mode="quantized", quant_bits=spec.bits, group_size=spec.group_size)
+
+    def capture_block(slot, h):
+        """FP forward of one block, returning per-linear inputs."""
+        caps = {}
+        xn = rmsnorm(slot["ln1"], h, cfg.norm_eps)
+        p = slot["mixer"]
+        caps["mixer/wq"] = caps["mixer/wk"] = caps["mixer/wv"] = xn
+        b, s, _ = xn.shape
+        q = apply_linear(p["wq"], xn, None, "fp").reshape(b, s, h_heads, hd)
+        k = apply_linear(p["wk"], xn, None, "fp").reshape(b, s, kv, hd)
+        v = apply_linear(p["wv"], xn, None, "fp").reshape(b, s, kv, hd)
+        pos = jnp.arange(s)
+        from repro.models.common import apply_rope
+
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+        qg = q.reshape(b, s, kv, h_heads // kv, hd)
+        out = attn_mod._sdpa(qg, k, v, causal=True, q_pos=pos).reshape(b, s, h_heads * hd)
+        caps["mixer/wo"] = out
+        h = h + apply_linear(p["wo"], out, None, "fp")
+        x2 = rmsnorm(slot["ln2"], h, cfg.norm_eps)
+        f = slot["ffn"]
+        caps["ffn/w1"] = caps["ffn/w3"] = x2
+        hidden = jax.nn.silu(apply_linear(f["w1"], x2, None, "fp")) * apply_linear(
+            f["w3"], x2, None, "fp"
+        )
+        caps["ffn/w2"] = hidden
+        h = h + apply_linear(f["w2"], hidden, None, "fp")
+        return h, caps
+
+    layers = fp_params["layers"]
+    n_periods = jax.tree.leaves(layers)[0].shape[0]
+    h = embed(fp_params["embed"], calib_batch["tokens"], cfg.dtype)
+
+    out_layers = None
+    jcap = jax.jit(capture_block)
+    for pidx in range(n_periods):
+        slot = jax.tree.map(lambda l: l[pidx], layers)["s0"]
+        _, caps = jcap(slot, h)
+        q_slot = {}
+        for key, sub in slot.items():
+            if key in ("ln1", "ln2"):
+                q_slot[key] = sub
+                continue
+            q_sub = {}
+            for lname, lin in sub.items():
+                x = np.asarray(caps[f"{key}/{lname}"], np.float32)
+                hess = hessian_from_acts(x)
+                codes, s, z = gptq_quantize(np.asarray(lin["w"]), hess, spec)
+                flat = codes.reshape(-1, codes.shape[-1])
+                import jax.numpy as jnp2
+
+                q_sub[lname] = {
+                    "w_packed": packing.pack(jnp2.asarray(flat), spec.bits, axis=0),
+                    "s": jnp2.asarray(s),
+                    "zq": jnp2.asarray(z.astype(np.int32)),
+                }
+                if "b" in lin:
+                    q_sub[lname]["b"] = lin["b"]
+            q_slot[key] = q_sub
+        # propagate through the QUANTIZED block
+        h, _, _ = jax.jit(
+            lambda sl, hh: apply_period({"s0": sl}, model_fp.layout, cfg_q, hh)
+        )(q_slot, h)
+        if out_layers is None:
+            out_layers = jax.tree.map(
+                lambda l: jnp.zeros((n_periods, *l.shape), l.dtype), q_slot
+            )
+        out_layers = jax.tree.map(lambda st, sl: st.at[pidx].set(sl), out_layers, q_slot)
+
+    out = dict(fp_params)
+    out["layers"] = {"s0": out_layers}
+    return cfg_q, out

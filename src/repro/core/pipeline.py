@@ -1,0 +1,95 @@
+"""End-to-end EfficientQAT pipeline (paper Fig. 2 right):
+
+    FP model --Block-AP--> fake-quant (W,s,z trained) --pack--> quantized
+             --E2E-QP--> quantized model with task-tuned step sizes.
+
+Also provides a small FP pre-trainer to produce teachers for the
+laptop-scale claim-validation experiments."""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import jax
+
+from repro.core.block_ap import BlockAPConfig, block_ap
+from repro.core.convert import fake_tree_to_quantized, rtn_tree
+from repro.core.e2e_qp import E2EQPConfig, run_e2e_qp
+from repro.models.common import ModelConfig, qspec
+from repro.models.model import Model
+from repro.optim import adamw, apply_updates
+
+Params = dict[str, Any]
+
+
+def pretrain_fp(
+    cfg: ModelConfig, batches: Iterable[dict], *, lr: float = 3e-3, rng=None
+) -> tuple[Model, Params]:
+    """Train a small FP teacher from scratch (stand-in for a pretrained LLM)."""
+    cfg = cfg.replace(mode="fp", quant_bits=0)
+    model = Model(cfg)
+    params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
+    opt = adamw(lr, clip_norm=1.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    for batch in batches:
+        params, opt_state, loss = step(params, opt_state, batch)
+    return model, params
+
+
+def quantize_rtn(cfg_fp: ModelConfig, fp_params: Params, bits: int, group: int):
+    """RTN baseline: direct min/max rounding, no training."""
+    cfg_q = cfg_fp.replace(mode="quantized", quant_bits=bits, group_size=group)
+    return cfg_q, rtn_tree(fp_params, qspec(cfg_q))
+
+
+def run_block_ap(
+    cfg_fp: ModelConfig,
+    fp_params: Params,
+    calib: dict,
+    bits: int,
+    group: int,
+    bcfg: BlockAPConfig = BlockAPConfig(),
+    variant: str = "szW",
+    pack: bool = True,
+) -> tuple[ModelConfig, Params]:
+    """Block-AP then pack -> quantized-mode params. ``pack=False`` returns the
+    fake-quant model (Table-6 evaluation: rounding/clip variants are assessed
+    pre-commit, as unregularised h(r) does not converge to {0,1})."""
+    cfg_fake = cfg_fp.replace(
+        mode="fake_quant", quant_bits=bits, group_size=group, fq_variant=variant
+    )
+    fake_params, _ = block_ap(Model(cfg_fp), fp_params, cfg_fake, calib, bcfg)
+    if not pack:
+        return cfg_fake, fake_params
+    cfg_q = cfg_fake.replace(mode="quantized", fq_variant="szW")
+    q_params = fake_tree_to_quantized(fake_params, qspec(cfg_q), variant=variant)
+    return cfg_q, q_params
+
+
+def efficient_qat(
+    cfg_fp: ModelConfig,
+    fp_params: Params,
+    calib: dict,
+    train_batches: Iterable[dict],
+    *,
+    bits: int = 2,
+    group: int = 64,
+    bcfg: BlockAPConfig = BlockAPConfig(),
+    ecfg: E2EQPConfig = E2EQPConfig(),
+    skip_block_ap: bool = False,
+) -> tuple[ModelConfig, Params, list]:
+    """The full two-phase EfficientQAT recipe. ``skip_block_ap`` reproduces
+    the Table-5 'E2E-QP only' row (RTN init)."""
+    if skip_block_ap:
+        cfg_q, q_params = quantize_rtn(cfg_fp, fp_params, bits, group)
+    else:
+        cfg_q, q_params = run_block_ap(cfg_fp, fp_params, calib, bits, group, bcfg)
+    model_q = Model(cfg_q)
+    q_params, log = run_e2e_qp(model_q, q_params, train_batches, ecfg)
+    return cfg_q, q_params, log

@@ -1,0 +1,128 @@
+"""Quantized linear layer — the single weight-bearing primitive of the
+framework. One parameter pytree, three modes:
+
+* ``fp``         : plain ``y = x @ W + b`` (full-precision baseline / pre-quant).
+* ``fake_quant`` : Block-AP forward — ``y = x @ fq(W; s, z) + b`` with the
+                   paper's STE gradients flowing to (W, s, z).
+* ``quantized``  : E2E-QP / serving — W stored as packed uint32 bit-planes,
+                   only ``s`` (and optionally ``z``) differentiable; forward
+                   either dequant+matmul (XLA) or the fused Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quant import (
+    QuantSpec,
+    dequantize,
+    fake_quant,
+    group_reshape,
+    group_unreshape,
+    init_qparams,
+    quantize,
+)
+
+Params = dict[str, Any]
+
+__all__ = [
+    "init_fp",
+    "fp_to_fake",
+    "fake_to_quantized",
+    "quantized_weight",
+    "apply_linear",
+]
+
+
+def init_fp(
+    rng: jax.Array,
+    in_features: int,
+    out_features: int,
+    *,
+    use_bias: bool = False,
+    dtype=jnp.float32,
+    scale: float | None = None,
+) -> Params:
+    scale = scale if scale is not None else in_features**-0.5
+    w = jax.random.normal(rng, (in_features, out_features), dtype=jnp.float32) * scale
+    p: Params = {"w": w.astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_features,), dtype=dtype)
+    return p
+
+
+def fp_to_fake(params: Params, spec: QuantSpec) -> Params:
+    """RTN-initialize (s, z) from the current weights (Block-AP entry point)."""
+    s, z = init_qparams(params["w"], spec)
+    out = dict(params)
+    out["s"], out["z"] = s, z
+    return out
+
+
+def fake_to_quantized(params: Params, spec: QuantSpec) -> Params:
+    """Freeze integer codes; pack to uint32 bit-planes (E2E-QP entry point)."""
+    w, s, z = params["w"], params["s"], params["z"]
+    codes = quantize(w, s, z, spec)  # (G, g, out) int32
+    flat = group_unreshape(codes)  # (in, out)
+    out: Params = {
+        "w_packed": packing.pack(flat, spec.bits, axis=0),
+        "s": s.astype(jnp.float32),
+        # z is stored rounded (low-bit in a real deployment; int32 carrier here;
+        # size accounting uses spec.bits — see core.quant.avg_bits_per_param).
+        "zq": jnp.round(z).astype(jnp.int32),
+    }
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def quantized_weight(params: Params, spec: QuantSpec, dtype=jnp.float32) -> jax.Array:
+    """Dequantized Ŵ from packed storage; differentiable w.r.t. ``s`` only
+    (∂ŵ/∂s = w_q − z exactly — the E2E-QP gradient, no STE needed)."""
+    flat = packing.unpack(params["w_packed"], spec.bits, axis=0)  # (in, out) int32
+    codes = group_reshape(flat, spec.group_size)
+    return dequantize(codes, params["s"], params["zq"].astype(jnp.float32), dtype=dtype)
+
+
+def apply_linear(
+    params: Params,
+    x: jax.Array,
+    spec: QuantSpec | None,
+    mode: str = "fp",
+    *,
+    use_kernel: bool = False,
+    variant: str = "szW",
+) -> jax.Array:
+    """y = x @ W_eff + b under the given mode."""
+    if mode == "fp":
+        w = params["w"].astype(x.dtype)
+        y = x @ w
+    elif mode == "fake_quant":
+        assert spec is not None
+        if variant == "szW":
+            w_hat = fake_quant(params["w"], params["s"], params["z"], spec)
+        else:
+            from repro.core.ablate import variant_weight  # lazy: avoid cycle
+
+            w_hat = variant_weight(params, spec, variant)
+        y = x @ w_hat.astype(x.dtype)
+    elif mode == "quantized":
+        assert spec is not None
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
+
+            y = kernel_ops.quant_matmul(
+                x, params["w_packed"], params["s"], params["zq"], spec
+            )
+        else:
+            w_hat = quantized_weight(params, spec, dtype=x.dtype)
+            y = x @ w_hat
+    else:
+        raise ValueError(f"unknown qlinear mode: {mode}")
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y

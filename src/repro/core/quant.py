@@ -1,0 +1,172 @@
+"""Uniform group-wise quantization core (EfficientQAT Eq. 1-2) with the
+paper's LSQ+-style straight-through gradients (Appendix B, Eq. 3-5).
+
+Conventions
+-----------
+* Weights are stored as ``(in_features, out_features)`` and consumed as
+  ``y = x @ W``; quantization groups run along the **contraction** axis
+  (``in_features``), matching the paper's per-output-channel grouping and the
+  TPU kernel's HBM->VMEM tile layout.
+* ``group_size == -1`` means per-(output)-channel quantization (one group
+  spanning the full contraction axis), as in the paper's g=-1 ablation.
+* All quant parameters are float32; packed integer codes live in
+  :mod:`repro.core.packing`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "group_reshape",
+    "group_unreshape",
+    "init_qparams",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "avg_bits_per_param",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a uniform quantizer.
+
+    Attributes:
+      bits: target bit-width N (2, 3, 4, or 8).
+      group_size: contraction-axis group size g; -1 = per-channel.
+    """
+
+    bits: int = 4
+    group_size: int = 64
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.bits) - 1
+
+    def n_groups(self, in_features: int) -> int:
+        if self.group_size == -1:
+            return 1
+        if in_features % self.group_size:
+            raise ValueError(
+                f"in_features={in_features} not divisible by group_size={self.group_size}"
+            )
+        return in_features // self.group_size
+
+
+def group_reshape(w: jax.Array, group_size: int) -> jax.Array:
+    """(in, out) -> (n_groups, g, out) along the contraction axis."""
+    in_f = w.shape[0]
+    g = in_f if group_size == -1 else group_size
+    if in_f % g:
+        raise ValueError(f"in_features={in_f} not divisible by group_size={g}")
+    return w.reshape(in_f // g, g, *w.shape[1:])
+
+
+def group_unreshape(wg: jax.Array) -> jax.Array:
+    """(n_groups, g, out) -> (in, out)."""
+    return wg.reshape(wg.shape[0] * wg.shape[1], *wg.shape[2:])
+
+
+def init_qparams(w: jax.Array, spec: QuantSpec) -> tuple[jax.Array, jax.Array]:
+    """RTN (min/max) initialization of (s, z) per group.
+
+    Returns (s, z) with shape (n_groups, 1, out): step size (float) and the
+    *float* zero point (trained continuously in Block-AP, rounded on pack).
+    """
+    wg = group_reshape(w, spec.group_size)
+    wmax = jnp.max(wg, axis=1, keepdims=True)
+    wmin = jnp.min(wg, axis=1, keepdims=True)
+    # Guard degenerate (constant) groups.
+    rng = jnp.maximum(wmax - wmin, 1e-5)
+    s = (rng / spec.qmax).astype(jnp.float32)
+    z = jnp.clip(jnp.round(-wmin / s), 0.0, spec.qmax).astype(jnp.float32)
+    return s, z
+
+
+def quantize(w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Eq. (1): W_int = clamp(round(W/s) + z, 0, 2^N - 1); returns int32 codes
+    shaped (n_groups, g, out)."""
+    wg = group_reshape(w, spec.group_size).astype(jnp.float32)
+    q = jnp.round(wg / s) + jnp.round(z)
+    return jnp.clip(q, 0, spec.qmax).astype(jnp.int32)
+
+
+def dequantize(w_int: jax.Array, s: jax.Array, z: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Eq. (2): Ŵ = (W_int - z) * s ; accepts grouped codes, returns (in, out).
+
+    ``z`` is used as-is (integer zq after packing; continuous during E2E-QP's
+    train-z ablation, Table 7)."""
+    w_hat = (w_int.astype(jnp.float32) - z.astype(jnp.float32)) * s
+    return group_unreshape(w_hat).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant with the paper's analytic straight-through gradients (Eq. 3-5).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant(w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Quantize-dequantize in one op: Ŵ = (clamp(⌊W/s⌉ + z, 0, Qmax) - z)·s.
+
+    Differentiable w.r.t. (w, s, z) via the paper's Appendix-B gradients:
+      ∂ŵ/∂w = 1{in-range} (Eq. 5)
+      ∂ŵ/∂s = (⌊w/s⌉ - w/s)·1{in} + (-z)·1{below} + (Qmax - z)·1{above} (Eq. 3)
+      ∂ŵ/∂z = 0 in-range; -s otherwise (Eq. 4 — the paper writes "-1", which is
+               the gradient in the β = -z·s LSQ+ parameterisation; the analytic
+               derivative of Eq. 1-2 w.r.t. the *integer-domain* z is -s).
+    """
+    return _fq_fwd(w, s, z, spec)[0]
+
+
+def _fq_fwd(w, s, z, spec):
+    wg = group_reshape(w, spec.group_size).astype(jnp.float32)
+    v = wg / s
+    q_unclamped = jnp.round(v) + z
+    q = jnp.clip(q_unclamped, 0.0, float(spec.qmax))
+    w_hat = group_unreshape((q - z) * s).astype(w.dtype)
+    res = (v, q_unclamped, s, z)
+    return w_hat, res
+
+
+def _fq_bwd(spec, res, g_out):
+    v, q_unclamped, s, z = res
+    w_dtype, s_dtype, z_dtype = g_out.dtype, s.dtype, z.dtype
+    gg = group_reshape(g_out, spec.group_size).astype(jnp.float32)
+    below = q_unclamped < 0.0
+    above = q_unclamped > float(spec.qmax)
+    in_range = jnp.logical_not(jnp.logical_or(below, above))
+
+    # Eq. 5 — STE passes gradient to w only in range.
+    dw = jnp.where(in_range, gg, 0.0)
+    # Eq. 3 — step-size gradient.
+    ds_elem = jnp.where(
+        in_range,
+        jnp.round(v) - v,
+        jnp.where(below, -z, float(spec.qmax) - z),
+    )
+    ds = jnp.sum(gg * ds_elem, axis=1, keepdims=True)
+    # Eq. 4 — zero-point gradient (analytic: -s off-range, 0 in-range).
+    dz_elem = jnp.where(in_range, 0.0, -s)
+    dz = jnp.sum(gg * dz_elem, axis=1, keepdims=True)
+
+    return (
+        group_unreshape(dw).astype(w_dtype),
+        ds.astype(s_dtype),
+        dz.astype(z_dtype),
+    )
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def avg_bits_per_param(spec: QuantSpec) -> float:
+    """Paper Appendix E: avg bits = N + (N + 16)/g (FP16 s + N-bit z per group)."""
+    if spec.group_size == -1:
+        return float(spec.bits)
+    return spec.bits + (spec.bits + 16) / spec.group_size

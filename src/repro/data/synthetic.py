@@ -1,0 +1,72 @@
+"""Deterministic synthetic corpus — the offline stand-in for RedPajama /
+Alpaca (DESIGN.md §6). A seeded first-order Markov source with Zipfian
+marginals gives sequences a small LM can genuinely learn, so quantization
+deltas (FP vs RTN vs Block-AP vs +E2E-QP) are measurable and *ordered* the
+same way as on real data."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def markov_corpus(vocab: int, n_tokens: int, seed: int = 0, branching: int = 8) -> np.ndarray:
+    """Each token has `branching` likely successors (sparse transition)."""
+    rng = np.random.default_rng(seed)
+    succ = rng.integers(0, vocab, size=(vocab, branching))
+    logits = rng.gumbel(size=(vocab, branching))
+    probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    out = np.empty(n_tokens, np.int32)
+    t = int(rng.integers(vocab))
+    # vectorised-ish generation in blocks
+    choices = rng.random(n_tokens)
+    for i in range(n_tokens):
+        c = np.searchsorted(np.cumsum(probs[t]), choices[i])
+        t = int(succ[t, min(c, branching - 1)])
+        out[i] = t
+    return out
+
+
+def lm_batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int = 0):
+    """Iterator of {'tokens','labels'} next-token batches."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        tok = np.stack([tokens[s : s + seq] for s in starts])
+        lab = np.stack([tokens[s + 1 : s + seq + 1] for s in starts])
+        yield {"tokens": tok, "labels": lab}
+
+
+def calib_set(tokens: np.ndarray, n_samples: int, seq: int, seed: int = 1) -> dict:
+    """Fixed calibration batch (Block-AP; paper uses 4096 RedPajama samples)."""
+    (batch,) = list(lm_batches(tokens, n_samples, seq, 1, seed))
+    return batch
+
+
+def add_modalities(batch: dict, cfg, seed: int = 2) -> dict:
+    """Attach stub frontend inputs for encdec/vlm families."""
+    rng = np.random.default_rng(seed)
+    b = batch["tokens"].shape[0]
+    out = dict(batch)
+    if cfg.family == "encdec":
+        s = batch["tokens"].shape[1]
+        out["frames"] = rng.standard_normal((b, s, cfg.d_frontend)).astype(np.float32)
+    elif cfg.family == "vlm":
+        out["patches"] = rng.standard_normal(
+            (b, cfg.n_vision_tokens, cfg.d_vision)
+        ).astype(np.float32)
+    return out
+
+
+def eval_ppl(model, params, tokens: np.ndarray, batch: int, seq: int, n_batches: int = 4):
+    """Held-out perplexity (the Tables 1-3 metric, on the synthetic corpus)."""
+    import jax
+    import numpy as _np
+
+    losses = []
+    jloss = jax.jit(model.loss)
+    for b in lm_batches(tokens, batch, seq, n_batches, seed=999):
+        if model.cfg.family in ("encdec", "vlm"):
+            b = add_modalities(b, model.cfg, seed=999)
+        loss, m = jloss(params, b)
+        losses.append(float(m["xent"]))
+    return float(_np.exp(_np.mean(losses)))

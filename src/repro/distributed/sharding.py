@@ -1,0 +1,175 @@
+"""Logical-axis sharding: models annotate activations/params with *logical*
+axis names; a context-installed rule table maps them to physical mesh axes.
+
+Outside any `axis_rules(...)` context (unit tests, single-device smoke runs)
+every annotation is a no-op, so model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Default logical->physical table for the production meshes. `batch` folds the
+# pure-DP pod axis in when present.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "group": None,
+    "fsdp": "data",
+    "layers": None,
+    "state": None,
+}
+
+
+def _rules() -> dict[str, Any] | None:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Install logical->physical mapping (and mesh) for model annotations."""
+    prev = (_rules(), _mesh())
+    table = dict(DEFAULT_RULES)
+    if rules:
+        table.update(rules)
+    # Drop physical axes the mesh doesn't have (e.g. no 'pod' on single pod).
+    def filt(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        return axes if axes else None
+
+    _state.rules = {k: filt(v) for k, v in table.items()}
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def logical_to_spec(logical: tuple[str | None, ...], shape=None) -> P:
+    """Translate logical axis names to a PartitionSpec under current rules.
+
+    If `shape` is given, any axis whose size is not divisible by the assigned
+    mesh-axis product is replicated instead (e.g. 8 KV heads on a 16-way
+    model axis)."""
+    rules, mesh = _rules(), _mesh()
+    if rules is None:
+        return P()
+    parts = []
+    for i, name in enumerate(logical):
+        phys = rules.get(name) if name else None
+        if phys is not None and shape is not None and mesh is not None:
+            axes = (phys,) if isinstance(phys, str) else phys
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if shape[i] % size:
+                phys = None
+        parts.append(phys)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def lc(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; identity with no rules."""
+    rules, mesh = _rules(), _mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = logical_to_spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings: map each leaf path to a logical tuple by pattern.
+# ---------------------------------------------------------------------------
+
+# Ordered (regex, logical-axes) rules over '/'-joined param paths. The first
+# match wins. Leading stacked-layer / expert axes are padded on the left.
+#
+# OUT-group linears (column-parallel: output dim on 'model') get FSDP on the
+# contraction dim; IN-group linears (row-parallel: contraction dim on 'model')
+# get FSDP on the output dim. Packed 2-bit planes make the resulting
+# all-gathers ~8x cheaper than bf16 FSDP — a deliberate beyond-paper choice.
+_OUT = r"(wq|wk|wv|qkv|w1|w3|up|gates|in_proj|x_proj|dt_proj)"
+_IN = r"(wo|w2|down|out_proj)"
+
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"emb$", ("vocab", "embed")),
+    (r"head$", ("embed", "vocab")),
+    (r"(frontend|projector)/w$", (None, "embed")),
+    (_OUT + r"/w_packed$", ("fsdp", None, "ff")),
+    (_OUT + r"/(s|z|zq|c)$", ("fsdp", None, "ff")),
+    (_OUT + r"/(w|r)$", ("fsdp", "ff")),
+    (_OUT + r"/b$", ("ff",)),
+    (_IN + r"/w_packed$", ("ff", None, "fsdp")),
+    (_IN + r"/(s|z|zq|c)$", ("ff", None, "fsdp")),
+    (_IN + r"/(w|r)$", ("ff", "fsdp")),
+    (_IN + r"/b$", (None,)),
+    (r"conv_w$", (None, None, "ff")),
+    (r"conv_b$", ("ff",)),
+    (r"A_log$", ("ff", None)),
+    (r"D$", ("ff",)),
+    (r"rec$", (None, "heads", None, None)),
+    (r"router$", ("embed", None)),
+    (r"scale$", (None,)),
+    (r"bias$", (None,)),
+    (r"/b$", (None,)),
+]
+
+
+def _leaf_logical(path: str, ndim: int) -> tuple[str | None, ...]:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            lg = tuple(logical)
+            # Expert / stacked-layer leading axes: pad on the left.
+            if len(lg) < ndim:
+                rest = ndim - len(lg)
+                if "/experts/" in path:
+                    # experts own the 'model' axis (EP) — drop model-mapped
+                    # logical names from the tail to avoid double assignment.
+                    pads = [None] * (rest - 1) + ["expert"]
+                    lg = tuple(None if n in ("ff", "qkv", "heads") else n for n in lg)
+                else:
+                    pads = [None] * rest
+                lg = tuple(pads) + lg
+            elif len(lg) > ndim:
+                lg = lg[-ndim:]
+            return lg
+    return tuple([None] * ndim)
+
+
+def param_shardings(mesh: Mesh, params: Any, rules: dict | None = None) -> Any:
+    """NamedSharding pytree for a parameter pytree using PARAM_RULES."""
+    with axis_rules(mesh, rules):
+
+        def one(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            spec = logical_to_spec(_leaf_logical(pstr, leaf.ndim), leaf.shape)
+            return NamedSharding(mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(one, params)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

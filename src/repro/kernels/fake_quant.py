@@ -1,0 +1,61 @@
+"""Fused quantize-dequantize Pallas kernel — the Block-AP forward hot-spot.
+
+One pass over W in VMEM tiles: v = W/s; q = clamp(round(v)+z); Ŵ = (q-z)·s.
+Tiles are (groups_per_tile * g, bn) so every tile holds whole quant groups
+and the (s, z) tiles broadcast without gathers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, s_ref, z_ref, o_ref, *, bits: int, group: int):
+    w = w_ref[...].astype(jnp.float32)  # (bg*g, bn)
+    s = s_ref[...]  # (bg, 1, bn)
+    z = jnp.round(z_ref[...])
+    bg = s.shape[0]
+    bn = w.shape[-1]
+    wg = w.reshape(bg, group, bn)
+    q = jnp.clip(jnp.round(wg / s) + z, 0.0, float(2**bits - 1))
+    o_ref[...] = ((q - z) * s).reshape(w.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group", "bg", "bn", "interpret")
+)
+def fake_quant(
+    w: jax.Array,
+    s: jax.Array,
+    z: jax.Array,
+    *,
+    bits: int,
+    group: int,
+    bg: int = 8,
+    bn: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """w: (K, N); s/z: (K/g, 1, N) -> fake-quantized (K, N) in w.dtype."""
+    k, n = w.shape
+    g = k if group == -1 else group
+    ngroups = k // g
+    bg = min(bg, ngroups)
+    bn = min(bn, n)
+    assert ngroups % bg == 0 and n % bn == 0
+
+    grid = (ngroups // bg, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bg * g, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, 1, bn), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bg, 1, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bg * g, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), w.dtype),
+        interpret=interpret,
+    )(w, s, z)

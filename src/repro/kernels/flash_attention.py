@@ -1,0 +1,102 @@
+"""Causal flash attention (online-softmax) Pallas TPU kernel with native GQA:
+q is laid out (B*H, S, hd) and k/v stay (B*K, S, hd) — the BlockSpec index
+map routes each query head to its KV group, so grouped KV is never repeated
+in HBM. Tiles: (bq, hd) x (bk, hd) with fp32 running (m, l, acc) scratch in
+VMEM; the KV grid axis is innermost and fully-masked blocks are skipped via
+pl.when."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, bq, bk, nk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki * bk <= qi * bq + bq - 1)  # skip fully-masked causal blocks
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _fini():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_q_heads", "n_kv_heads", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B*H, S, hd)
+    k: jax.Array,  # (B*K, S, hd)
+    v: jax.Array,
+    *,
+    n_q_heads: int,
+    n_kv_heads: int,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, hd = q.shape
+    group = n_q_heads // n_kv_heads
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    nq, nk = s // bq, s // bk
+    scale = hd**-0.5
+
+    def kv_index(b, i, kk):
+        batch = b // n_q_heads
+        head = b % n_q_heads
+        return (batch * n_kv_heads + head // group, kk, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),  # running max m
+            pltpu.VMEM((bq,), jnp.float32),  # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),  # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

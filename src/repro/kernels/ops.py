@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels. These adapt model-side
+shapes ((B, S, d) activations, QuantSpec) to kernel-side layouts and pick
+interpret mode automatically (interpret=True off-TPU so CPU tests execute
+the kernel bodies)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec
+from repro.kernels import fake_quant as _fq_kernel
+from repro.kernels import quant_matmul as _qmm_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quant_matmul(
+    x: jax.Array, w_packed: jax.Array, s: jax.Array, zq: jax.Array, spec: QuantSpec
+) -> jax.Array:
+    """y = x @ Ŵ for activations x (..., K) against packed weights."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_packed.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    # pad M to a tile multiple (decode has M = batch)
+    bm = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    y = _qmm_kernel.quant_matmul(
+        x2,
+        w_packed,
+        s.astype(jnp.float32),
+        zq.astype(jnp.int32),
+        bits=spec.bits,
+        group=spec.group_size,
+        bm=bm,
+        interpret=_interpret(),
+    )
+    if pad:
+        y = y[:m]
+    return y.reshape(*lead, n)
+
+
+def fused_fake_quant(w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Forward-only fused quant-dequant (Block-AP eval path)."""
+    return _fq_kernel.fake_quant(
+        w, s.astype(jnp.float32), z.astype(jnp.float32),
+        bits=spec.bits, group=spec.group_size, interpret=_interpret(),
+    )

@@ -1,0 +1,91 @@
+"""Fused group-dequant matmul Pallas TPU kernel — the BitBLAS/Marlin analogue
+(paper Table 10), rethought for TPU:
+
+* packed uint32 bit-planes stream HBM->VMEM tile-by-tile via BlockSpec —
+  weight-side HBM traffic is bits/16 of the bf16 equivalent (8x less at 2-bit),
+  which is the whole win for memory-bound decode GEMV/GEMM;
+* unpack (shift/mask) + group dequant ((q - z) * s) run as VPU ops in VREGs;
+* the dequantized bf16 tile feeds the MXU with 128-aligned dims;
+* fp32 accumulation across the K grid axis.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the output tile accumulates in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, s_ref, z_ref, o_ref, *, bits: int, group: int, bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    planes = w_ref[...]  # (bk//32, bits, bn) uint32
+    bn = planes.shape[-1]
+
+    # unpack: bit-plane -> int codes (bk, bn)
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (bk // 32, 32, bn), 1)
+    vals = jnp.zeros((bk // 32, 32, bn), jnp.uint32)
+    for j in range(bits):
+        bit = (planes[:, j, None, :] >> pos) & jnp.uint32(1)
+        vals = vals | (bit << jnp.uint32(j))
+    codes = vals.reshape(bk, bn).astype(jnp.float32)
+
+    # group dequant: s/z tiles are (bk//group, 1, bn)
+    s = s_ref[...]
+    z = z_ref[...].astype(jnp.float32)
+    w = (codes.reshape(bk // group, group, bn) - z) * s  # fp32
+    w = w.reshape(bk, bn).astype(x.dtype)
+
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group", "bm", "bk", "bn", "interpret")
+)
+def quant_matmul(
+    x: jax.Array,
+    w_packed: jax.Array,
+    s: jax.Array,
+    zq: jax.Array,
+    *,
+    bits: int,
+    group: int,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = x @ dequant(w_packed, s, zq).  x: (M, K); w_packed: (K/32, bits, N);
+    s: (K/g, 1, N) f32; zq: (K/g, 1, N) int32. Returns (M, N) in x.dtype."""
+    m, k = x.shape
+    n = w_packed.shape[-1]
+    g = k if group == -1 else group
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    if bk % g:
+        bk = g if g <= k else k  # keep whole groups inside a K tile
+    assert k % bk == 0 and n % bn == 0 and m % bm == 0, (m, k, n, bm, bk, bn)
+    assert bk % 32 == 0 and bk % g == 0
+
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group=g, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 32, bits, bn), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((bk // g, 1, bn), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((bk // g, 1, bn), lambda i, j, kk: (kk, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, s, zq)
+    return out.astype(x.dtype)

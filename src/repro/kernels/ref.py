@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel. These define the semantics the
+kernels must reproduce (tests assert allclose against these across shape /
+dtype / bit-width sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_ref(planes: jax.Array, bits: int) -> jax.Array:
+    """uint32 bit-planes (K//32, bits, N) -> int32 codes (K, N)."""
+    pos = jnp.arange(32, dtype=jnp.uint32)
+    vals = jnp.zeros((planes.shape[0], 32, planes.shape[2]), jnp.uint32)
+    for j in range(bits):
+        bit = (planes[:, j, None, :] >> pos[None, :, None]) & jnp.uint32(1)
+        vals = vals | (bit << jnp.uint32(j))
+    return vals.reshape(-1, planes.shape[2]).astype(jnp.int32)
+
+
+def dequant_ref(
+    w_packed: jax.Array, s: jax.Array, zq: jax.Array, bits: int, group_size: int
+) -> jax.Array:
+    """Packed planes + (s, zq) -> Ŵ (K, N) float32."""
+    codes = unpack_ref(w_packed, bits)  # (K, N)
+    k, n = codes.shape
+    g = k if group_size == -1 else group_size
+    grouped = codes.reshape(k // g, g, n).astype(jnp.float32)
+    w = (grouped - zq.astype(jnp.float32)) * s
+    return w.reshape(k, n)
+
+
+def quant_matmul_ref(
+    x: jax.Array,
+    w_packed: jax.Array,
+    s: jax.Array,
+    zq: jax.Array,
+    bits: int,
+    group_size: int,
+) -> jax.Array:
+    """y = x @ dequant(w_packed); fp32 accumulation; returns x.dtype."""
+    w = dequant_ref(w_packed, s, zq, bits, group_size)
+    y = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def fake_quant_ref(w: jax.Array, s: jax.Array, z: jax.Array, bits: int) -> jax.Array:
+    """Group-wise fake-quant: w (K, N), s/z (K//g, 1, N) -> (K, N), w.dtype."""
+    g = w.shape[0] // s.shape[0]
+    wg = w.reshape(s.shape[0], g, w.shape[1]).astype(jnp.float32)
+    q = jnp.clip(jnp.round(wg / s) + jnp.round(z), 0.0, float(2**bits - 1))
+    return ((q - jnp.round(z)) * s).reshape(w.shape).astype(w.dtype)

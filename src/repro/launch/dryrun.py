@@ -1,0 +1,325 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/roofline artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The 512 placeholder host devices exist ONLY here (set before any jax import,
+as jax locks the device count on first init)."""
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import roofline
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable, input_specs
+from repro.core.e2e_qp import E2EQPConfig, make_step
+from repro.distributed.sharding import axis_rules, logical_to_spec, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import partition, path_mask
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+DRYRUN_ARCHS = [a for a in ARCHS if a != "llama2_7b"]  # the 10 assigned archs
+
+
+def _repl(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_shardings(mesh, batch_tree):
+    """Data-parallel batch axis (folds 'pod' in when present)."""
+
+    def one(leaf):
+        spec = logical_to_spec(("batch",) + (None,) * (leaf.ndim - 1), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    with axis_rules(mesh):
+        return jax.tree.map(one, batch_tree)
+
+
+_CACHE_LOGICAL = {
+    # (leaf name, ndim-without-period-axis) -> logical axes
+    ("k", 4): ("batch", "seq", "kv_heads", None),
+    ("v", 4): ("batch", "seq", "kv_heads", None),
+    ("h", 3): ("batch", "ff", None),  # mamba ssm state
+    ("conv", 3): ("batch", None, "ff"),
+    ("C", 4): ("batch", "heads", None, None),  # mlstm matrix memory
+    ("n", 3): ("batch", "heads", None),
+    ("n", 2): ("batch", None),  # slstm
+    ("c", 2): ("batch", None),
+    ("h", 2): ("batch", None),
+    ("m", 2): ("batch", None),
+}
+
+
+def cache_shardings(mesh, cache_tree, rules=None):
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        logical = list(_CACHE_LOGICAL.get((name, leaf.ndim - 1), ()))
+        if not logical:
+            return NamedSharding(mesh, P())
+        # KV heads that don't divide the model axis: fall back to sharding
+        # the head_dim (contraction) axis — scores become partial + all-reduce
+        # instead of replicating a multi-GiB cache per device.
+        if name in ("k", "v") and leaf.ndim - 1 == 4:
+            if leaf.shape[3] % model_size:
+                logical = ["batch", None, None, "heads"]
+        spec = logical_to_spec((None,) + tuple(logical), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    with axis_rules(mesh, rules):
+        return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+RUNTIME_KEYS = ("microbatches", "grad_compression", "rule_seq")
+
+
+def _split_overrides(overrides: dict | None) -> tuple[dict, dict]:
+    overrides = dict(overrides or {})
+    runtime = {k: overrides.pop(k) for k in list(overrides) if k in RUNTIME_KEYS}
+    return overrides, runtime
+
+
+def build_cell(arch: str, shape_name: str, mesh, overrides: dict | None = None):
+    """Returns (fn, abstract_args, in_shardings, meta)."""
+    cfg_ovr, runtime = _split_overrides(overrides)
+    cfg = get_config(arch, **cfg_ovr)
+    kind = SHAPES[shape_name].kind
+    model = Model(cfg)
+    specs = input_specs(cfg, shape_name)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    rules = {"seq": runtime["rule_seq"]} if runtime.get("rule_seq") else None
+    p_sh = param_shardings(mesh, params_shape, rules)
+    meta = {"kind": kind, "cfg": cfg, "rules": rules}
+
+    if kind == "train":
+        # the production trainer step (E2E-QP: only `s` is trainable), with
+        # optional microbatch accumulation / int8 gradient compression.
+        from repro.train.trainer import TrainConfig, Trainer
+
+        tcfg = TrainConfig(
+            lr=1e-5,
+            microbatches=int(runtime.get("microbatches", 1)),
+            grad_compression=bool(runtime.get("grad_compression", False)),
+            trainable="qparams",
+        )
+        trainer = Trainer(model, tcfg, mesh=mesh)
+        raw_step = trainer.make_step()
+        mask = path_mask(params_shape, lambda p: p.rsplit("/", 1)[-1] == "s")
+        train_s, frozen_s = partition(params_shape, mask)
+        train_sh, frozen_sh = partition(p_sh, mask)
+        opt_state_s = jax.eval_shape(trainer.opt.init, train_s)
+        opt_sh = {
+            "step": NamedSharding(mesh, P()),
+            "m": train_sh,
+            "v": jax.tree.map(lambda s: s, train_sh),
+        }
+        if tcfg.grad_compression:
+            from repro.optim.compress import init_error_state
+
+            err_s = jax.eval_shape(init_error_state, train_s)
+            err_sh = jax.tree.map(lambda s: s, train_sh)
+        else:
+            err_s, err_sh = None, None
+        args = (train_s, frozen_s, opt_state_s, err_s, specs["batch"])
+        shardings = (
+            train_sh, frozen_sh, opt_sh, err_sh,
+            batch_shardings(mesh, specs["batch"]),
+        )
+        return raw_step, args, shardings, meta
+
+    if kind == "prefill":
+        args = (params_shape, specs["batch"])
+        shardings = (p_sh, batch_shardings(mesh, specs["batch"]))
+        return model.prefill, args, shardings, meta
+
+    # decode
+    args = (params_shape, specs["cache"], specs["tokens"], specs["pos"])
+    shardings = (
+        p_sh,
+        cache_shardings(mesh, specs["cache"], rules),
+        batch_shardings(mesh, specs["tokens"]),
+        NamedSharding(mesh, P()),
+    )
+    return model.decode_step, args, shardings, meta
+
+
+def _depth_variants(cfg) -> tuple[list[dict], int]:
+    """Overrides for 1-period and 2-period variants + the true period count
+    (XLA cost_analysis counts a while-loop body once; we re-lower at depths
+    1 and 2 and extrapolate linearly — see roofline.extrapolate)."""
+    fam = cfg.family
+    if fam == "encdec":
+        return (
+            [{"n_enc_layers": 1, "n_dec_layers": 1, "n_layers": 1},
+             {"n_enc_layers": 2, "n_dec_layers": 2, "n_layers": 2}],
+            cfg.n_enc_layers or cfg.n_layers,
+        )
+    per = {"dense": 1, "moe": 1, "hybrid": cfg.attn_every,
+           "vlm": cfg.cross_attn_every, "ssm": cfg.slstm_every}[fam]
+    return [{"n_layers": per}, {"n_layers": 2 * per}], cfg.n_layers // per
+
+
+def run_cell(
+    arch: str, shape_name: str, *, multi_pod: bool = False,
+    overrides: dict | None = None, fast: bool = False,
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(overrides or {})
+    overrides.setdefault("loss_unroll", True)
+    t0 = time.time()
+    fn, args, shardings, meta = build_cell(arch, shape_name, mesh, overrides)
+    with mesh, axis_rules(mesh, meta["rules"]):
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+
+    # cost accounting at depths 1p/2p -> linear extrapolation to full depth
+    depth_ovr, n_periods = _depth_variants(meta["cfg"])
+    if fast:  # compile-proof only: raw whole-module costs, flagged as such
+        rl = roofline.from_compiled(compiled)
+        sh = SHAPES[shape_name]
+        cfg = meta["cfg"]
+        mf = roofline.model_flops(cfg, sh.batch, sh.seq, meta["kind"]) / mesh.size
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": meta["kind"], "compile_s": round(t_compile, 1),
+            "raw_accounting": True,
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes_per_device": (
+                (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            ),
+            "model_flops_per_device": mf,
+            "useful_flop_ratio": None,
+            "collectives": rl.coll_detail,
+            "n_periods": n_periods,
+            **rl.as_dict(),
+        }
+    # inner recurrent-chunk scans are unrolled in cost mode; cap the chunk so
+    # the unrolled HLO stays compilable at 32k sequences
+    seq = min(SHAPES[shape_name].seq, 2048)
+    cost_ovr = {"scan_layers": 0, "mamba_chunk": seq, "mlstm_chunk": seq}
+    shallow = []
+    for ovr in depth_ovr:
+        fn_s, args_s, sh_s, meta_s = build_cell(
+            arch, shape_name, mesh, {**overrides, **cost_ovr, **ovr}
+        )
+        with mesh, axis_rules(mesh, meta_s["rules"]):
+            comp_s = jax.jit(fn_s, in_shardings=sh_s).lower(*args_s).compile()
+        shallow.append(roofline.from_compiled(comp_s))
+    rl = roofline.extrapolate(shallow[0], shallow[1], n_periods)
+    rl_whole_module = roofline.from_compiled(compiled)
+    sh = SHAPES[shape_name]
+    cfg = meta["cfg"]
+    mf = roofline.model_flops(cfg, sh.batch, sh.seq, meta["kind"]) / mesh.size
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": meta["kind"],
+        "compile_s": round(t_compile, 1),
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes_per_device": (
+            (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+        ),
+        "model_flops_per_device": mf,
+        "useful_flop_ratio": (mf / rl.flops) if rl.flops else None,
+        "collectives": rl.coll_detail,
+        "raw_whole_module": rl_whole_module.as_dict(),  # pre-extrapolation
+        "n_periods": n_periods,
+        **rl.as_dict(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="compile proof only (skip extrapolation cost modules)")
+    ap.add_argument("--tag", type=str, default=None,
+                    help="write results under experiments/perf/<tag>/ instead")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (ints auto-parsed)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            overrides[k] = v
+
+    out_dir = OUT_DIR
+    if args.tag:
+        out_dir = OUT_DIR.parent / "perf" / args.tag
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = DRYRUN_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not applicable(cfg, shape):
+                continue
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        out = out_dir / f"{tag}.json"
+        if out.exists() and not args.force:
+            print(f"skip {tag} (cached)")
+            continue
+        print(f"=== {tag} ===", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp, overrides=overrides,
+                           fast=args.fast)
+            res["overrides"] = overrides
+        except Exception as e:  # a failing cell is a bug — surface it loudly
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"FAILED {tag}: {res['error']}", flush=True)
+        out.write_text(json.dumps(res, indent=2, default=str))
+        if "error" not in res:
+            print(
+                f"  ok: compile={res['compile_s']}s peak={res['peak_bytes_per_device'] and res['peak_bytes_per_device']/2**30:.2f}GiB "
+                f"t_comp={res['t_compute_s']:.4f}s t_mem={res['t_memory_s']:.4f}s "
+                f"t_coll={res['t_collective_s']:.4f}s bottleneck={res['bottleneck']}",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

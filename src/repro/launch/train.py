@@ -1,0 +1,81 @@
+"""Training launcher: E2E-QP (default) or FP training of any registered arch
+on a chosen mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 20 --batch 8 --seq 64
+
+Full configs target the production mesh (use inside a real pod slice);
+--smoke runs the reduced config on local devices end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import synthetic
+from repro.data.pipeline import PrefetchLoader
+from repro.distributed.sharding import axis_rules, param_shardings
+from repro.models.model import Model
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mode", default="quantized", choices=["quantized", "fp"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    overrides = {} if args.mode == "quantized" else {"mode": "fp", "quant_bits": 0}
+    cfg = get_config(args.arch, smoke=args.smoke, **overrides)
+    model = Model(cfg)
+    print(f"arch={cfg.name} mode={cfg.mode} bits={cfg.quant_bits}")
+
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = None
+    if args.data_parallel * args.model_parallel > 1:
+        mesh = jax.make_mesh(
+            (args.data_parallel, args.model_parallel), ("data", "model")
+        )
+        params = jax.device_put(params, param_shardings(mesh, params))
+
+    tokens = synthetic.markov_corpus(cfg.vocab, 200_000, seed=0)
+
+    def gen():
+        for b in synthetic.lm_batches(tokens, args.batch, args.seq, args.steps, seed=1):
+            yield synthetic.add_modalities(b, cfg) if cfg.family in ("encdec", "vlm") else b
+
+    loader = PrefetchLoader(gen(), mesh=mesh)
+    tcfg = TrainConfig(
+        lr=args.lr,
+        steps=args.steps,
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+        trainable="qparams" if cfg.mode == "quantized" else "all",
+        ckpt_dir=args.ckpt_dir,
+    )
+    trainer = Trainer(model, tcfg, mesh=mesh)
+    if mesh is not None:
+        with mesh, axis_rules(mesh):
+            params, log = trainer.fit(params, loader)
+    else:
+        params, log = trainer.fit(params, loader)
+    losses = [e["loss"] for e in log if "loss" in e]
+    print(f"first loss={losses[0]:.4f}  last loss={losses[-1]:.4f}  steps={len(losses)}")
+    print("straggler events:", len(trainer.watchdog.events))
+
+
+if __name__ == "__main__":
+    main()

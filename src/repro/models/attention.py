@@ -1,0 +1,150 @@
+"""Grouped-query attention (self + cross) with KV-cache support.
+
+Every projection is a quantization-aware linear (the paper's target layer
+set); attention math runs in the activation dtype with fp32 softmax.
+The GQA einsum keeps K/V un-repeated: q is reshaped to (B, S, K, H/K, hd)
+so scores are computed per KV group without materialising repeated KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models.common import ModelConfig, apply_rope, linear, linear_init
+
+NEG_INF = -1e30
+
+
+def attn_init(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False, kv_dim: int | None = None) -> dict:
+    h, k, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    kv_in = kv_dim or d
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": linear_init(ks[0], cfg, d, h * hd, use_bias=cfg.qkv_bias),
+        "wk": linear_init(ks[1], cfg, kv_in, k * hd, use_bias=cfg.qkv_bias),
+        "wv": linear_init(ks[2], cfg, kv_in, k * hd, use_bias=cfg.qkv_bias),
+        "wo": linear_init(ks[3], cfg, h * hd, d),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _sdpa(q, k, v, *, causal, q_pos, kv_len_mask=None):
+    """q: (B,Sq,K,G,hd); k,v: (B,Sk,K,hd). Returns (B,Sq,K,G,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / (hd**0.5)
+    scores = scores.astype(jnp.float32)
+    sk = k.shape[1]
+    if causal:
+        kv_pos = jnp.arange(sk)
+        mask = q_pos[:, None] >= kv_pos[None, :]  # (Sq, Sk)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len_mask is not None:  # (B, Sk) valid mask (decode w/ cache)
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+
+
+def _sdpa_chunked(q, k, v, *, causal, q_pos, chunk):
+    """Query-chunked lazy-softmax attention: live score buffer is
+    (B, K, G, chunk, Sk) instead of (B, K, G, Sq, Sk) — the XLA-visible
+    flash-attention analogue used for the memory-roofline hillclimb."""
+    b, sq, kh, g, hd = q.shape
+    if sq % chunk:
+        return _sdpa(q, k, v, causal=causal, q_pos=q_pos)
+    n = sq // chunk
+    qc = q.reshape(b, n, chunk, kh, g, hd).swapaxes(0, 1)
+    pc = q_pos.reshape(n, chunk)
+
+    def one(args):
+        qq, pp = args
+        return _sdpa(qq, k, v, causal=causal, q_pos=pp)
+
+    out = jax.lax.map(one, (qc, pc))  # (n, b, chunk, K, G, hd)
+    return out.swapaxes(0, 1).reshape(b, sq, kh, g, hd)
+
+
+def _flash(q, k, v, cfg):
+    """Pallas flash-attention path (causal self-attention, full sequence)."""
+    from repro.kernels.flash_attention import flash_attention
+
+    b, sq, kh, g, hd = q.shape
+    h = kh * g
+    qf = q.reshape(b, sq, h, hd).swapaxes(1, 2).reshape(b * h, sq, hd)
+    kf = k.swapaxes(1, 2).reshape(b * kh, sq, hd)
+    vf = v.swapaxes(1, 2).reshape(b * kh, sq, hd)
+    of = flash_attention(
+        qf, kf, vf, n_q_heads=h, n_kv_heads=kh,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return of.reshape(b, h, sq, hd).swapaxes(1, 2).reshape(b, sq, kh, g, hd)
+
+
+def attn_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    kv_src: jax.Array | None = None,  # cross-attention source (None = self)
+    cache: dict | None = None,  # {'k','v'} (B, S_cache, K, hd) [+ cross: fixed]
+    pos: jax.Array | int = 0,  # first position of x
+    causal: bool = True,
+    make_cache: bool = False,
+    is_cross: bool = False,  # cross-attn even when kv_src is None (decode)
+) -> tuple[jax.Array, dict | None]:
+    h, kheads, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    b, sq, _ = x.shape
+    g = h // kheads
+    cross = is_cross or kv_src is not None
+    if cross and kv_src is None and cache is None:
+        raise ValueError("cross-attention needs kv_src or a prefilled cache")
+
+    q = _split_heads(linear(p["wq"], x, cfg), h, hd)
+    q = lc(q, "batch", None, "heads", None)  # seq stays whole inside attention
+    q_pos = pos + jnp.arange(sq)
+
+    if cross and cache is not None:
+        # Cross K/V were computed at prefill and are immutable.
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        kv_mask = None
+        causal = False
+    else:
+        src = kv_src if cross else x
+        k = _split_heads(linear(p["wk"], src, cfg), kheads, hd)
+        v = _split_heads(linear(p["wv"], src, cfg), kheads, hd)
+        k = lc(k, "batch", None, "kv_heads", None)
+        v = lc(v, "batch", None, "kv_heads", None)
+        if not cross:
+            q = apply_rope(q, q_pos[None, :], cfg.rope_theta)
+            k = apply_rope(k, (pos + jnp.arange(k.shape[1]))[None, :], cfg.rope_theta)
+        kv_mask = None
+        if cache is not None and not cross:
+            #
+
+            # Decode: write new K/V at `pos`, attend over the whole cache.
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            k, v = ck, cv
+            new_cache = {"k": ck, "v": cv}
+            kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos + sq - 1)
+            causal = False  # handled by kv_mask for single-step decode
+        elif make_cache:
+            new_cache = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+        else:
+            new_cache = None
+
+    q = q.reshape(b, sq, kheads, g, hd)
+    if cfg.use_flash and causal and sq > 1 and kv_mask is None and not cross:
+        out = _flash(q, k, v, cfg)
+    elif cfg.attn_chunk and sq > cfg.attn_chunk and kv_mask is None:
+        out = _sdpa_chunked(q, k, v, causal=causal, q_pos=q_pos, chunk=cfg.attn_chunk)
+    else:
+        out = _sdpa(q, k, v, causal=causal, q_pos=q_pos, kv_len_mask=kv_mask)
+    out = out.reshape(b, sq, h * hd)
+    y = linear(p["wo"], out, cfg)
+    return lc(y, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,223 @@
+"""Shared model substrate: configuration, norms, rotary embeddings, token /
+modality embeddings, and the chunked cross-entropy loss used by every arch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec
+
+__all__ = [
+    "ModelConfig",
+    "qspec",
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope_freqs",
+    "apply_rope",
+    "embed_init",
+    "embed",
+    "logits_head",
+    "chunked_xent",
+    "uniform_init",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config per assigned architecture (src/repro/configs/<id>.py)."""
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | encdec | ssm | vlm | hybrid
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    act: str = "swiglu"  # swiglu | sq_relu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 1.0e4
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- hybrid (jamba) ---
+    attn_every: int = 0  # one attention layer per this many layers
+    attn_offset: int = 4  # position of the attn layer inside the period
+    moe_every: int = 0  # MoE FFN every this many layers (others dense)
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_d_conv: int = 4
+    mamba_dt_rank: int = 0  # 0 -> d_model // 16
+    # --- xlstm ---
+    slstm_every: int = 0  # one sLSTM per this many layers (rest mLSTM)
+    mlstm_proj_factor: float = 2.0
+    # --- vlm ---
+    cross_attn_every: int = 0
+    n_vision_tokens: int = 0
+    d_vision: int = 0
+    # --- encdec (audio) ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    d_frontend: int = 0  # precomputed frame-embedding dim (stub frontend)
+    # --- misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    # --- quantization (the paper's technique) ---
+    quant_bits: int = 0  # 0 = full precision
+    group_size: int = 64
+    mode: str = "fp"  # fp | fake_quant | quantized
+    fq_variant: str = "szW"  # Table-6 trainable-parameter scheme (fake_quant)
+    use_kernel: bool = False  # Pallas fused dequant-matmul in quantized mode
+    # --- runtime ---
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "full"  # 'full' | 'dots_saveable' | 'nothing_saveable'
+    loss_chunk: int = 256  # sequence chunk for vocab-space loss
+    attn_chunk: int = 0  # query-chunked (lazy-softmax) attention; 0 = dense
+    use_flash: bool = False  # Pallas flash-attention kernel (TPU runtime)
+    loss_unroll: bool = False  # unroll loss chunks (dry-run cost accounting)
+    scan_layers: bool = True  # False: python-unrolled periods (cost modules)
+    mamba_chunk: int = 16  # selective-scan inner chunk
+    mlstm_chunk: int = 64  # mLSTM chunkwise-parallel chunk
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_causal_lm(self) -> bool:
+        return self.family != "encdec"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def qspec(cfg: ModelConfig) -> QuantSpec | None:
+    if cfg.quant_bits == 0 or cfg.mode == "fp":
+        return None
+    return QuantSpec(bits=cfg.quant_bits, group_size=cfg.group_size)
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary / embeddings
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def uniform_init(rng: jax.Array, shape, scale: float) -> jax.Array:
+    return jax.random.normal(rng, shape, jnp.float32) * scale
+
+
+def embed_init(rng: jax.Array, cfg: ModelConfig) -> dict:
+    p = {"emb": uniform_init(rng, (cfg.vocab, cfg.d_model), cfg.d_model**-0.5)}
+    if not cfg.tie_embeddings:
+        p["head"] = uniform_init(
+            jax.random.fold_in(rng, 1), (cfg.d_model, cfg.vocab), cfg.d_model**-0.5
+        )
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["emb"], tokens, axis=0).astype(dtype)
+
+
+def logits_head(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["emb"].T if cfg.tie_embeddings else p["head"]
+    return h @ w.astype(h.dtype)
+
+
+def chunked_xent(
+    p_embed: dict, h: jax.Array, labels: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Mean next-token cross-entropy without materialising (B, S, V) logits.
+
+    Sequence is processed in `cfg.loss_chunk` chunks via lax.map so the live
+    logits buffer is (B, chunk, V) — essential for 256k-vocab archs.
+    """
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    n = s // c
+    assert s % c == 0, (s, c)
+    h_chunks = h.reshape(b, n, c, d).swapaxes(0, 1)  # (n, B, c, d)
+    y_chunks = labels.reshape(b, n, c).swapaxes(0, 1)
+
+    def chunk_loss(args):
+        hc, yc = args
+        logits = logits_head(p_embed, hc, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    if cfg.loss_unroll:  # python loop -> every chunk visible to cost analysis
+        total = 0.0
+        for i in range(n):
+            total = total + chunk_loss((h_chunks[i], y_chunks[i]))
+        return total / (b * s)
+    totals = jax.lax.map(chunk_loss, (h_chunks, y_chunks))
+    return jnp.sum(totals) / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Quantization-aware linear: the single weight-bearing op used by every arch.
+# ---------------------------------------------------------------------------
+from repro.core.qlinear import (  # noqa: E402
+    apply_linear as _apply_linear,
+    fake_to_quantized as _fake_to_quantized,
+    fp_to_fake as _fp_to_fake,
+    init_fp as _init_fp,
+)
+
+
+def linear_init(
+    rng: jax.Array, cfg: ModelConfig, din: int, dout: int, *, use_bias: bool = False
+) -> dict:
+    p = _init_fp(rng, din, dout, use_bias=use_bias)
+    spec = qspec(cfg)
+    if spec is None:
+        return p
+    if cfg.mode == "fake_quant":
+        p = _fp_to_fake(p, spec)
+        if cfg.fq_variant != "szW":
+            from repro.core.ablate import add_variant_params
+
+            p = add_variant_params(p, spec, cfg.fq_variant)
+        return p
+    if cfg.mode == "quantized":
+        return _fake_to_quantized(_fp_to_fake(p, spec), spec)
+    return p
+
+
+def linear(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return _apply_linear(
+        p, x, qspec(cfg), cfg.mode, use_kernel=cfg.use_kernel, variant=cfg.fq_variant
+    )

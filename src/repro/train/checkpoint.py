@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing: pure-JAX (npz + manifest), asynchronous
+writer thread, latest-k retention, integrity manifest with step + tree
+structure, and restore-with-resharding (elastic resume onto a different
+mesh)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    """npz-safe flattening; extension dtypes (bfloat16) stored as uint16 with
+    a ::bf16 key tag."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten(like: Any, flat: dict[str, np.ndarray]) -> Any:
+    import ml_dtypes
+
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key + "::bf16" in flat:
+            arr = flat[key + "::bf16"].view(ml_dtypes.bfloat16)
+        else:
+            arr = flat[key]
+            if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+                arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves)
+
+
+class CheckpointManager:
+    """save(step, tree) -> async write to <dir>/step_<n>/ ; restores latest
+    *valid* checkpoint (manifest written last = commit marker)."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        flat = _flatten(tree)  # materialise on host before returning
+        if self._thread is not None:
+            self._thread.join()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat, extra or {})
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, extra: dict) -> None:
+        path = self.dir / f"step_{step:012d}"
+        tmp = self.dir / f".tmp_step_{step:012d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **flat)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "n_arrays": len(flat),
+            "bytes": int(sum(a.nbytes for a in flat.values())),
+            **extra,
+        }
+        # manifest written last: acts as the commit marker
+        (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+        if path.exists():
+            shutil.rmtree(path)
+        tmp.rename(path)
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.all_steps())
+        for step in ckpts[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{step:012d}", ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "MANIFEST.json").exists():  # only committed checkpoints
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: int | None = None, shardings: Any = None) -> tuple[Any, int]:
+        """Restore into the structure of ``like``; optionally device_put with
+        ``shardings`` (elastic resume onto a new mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:012d}"
+        flat = dict(np.load(path / "arrays.npz"))
+        tree = _unflatten(like, flat)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, step
+
+    def manifest(self, step: int) -> dict:
+        return json.loads((self.dir / f"step_{step:012d}" / "MANIFEST.json").read_text())

@@ -1,0 +1,61 @@
+"""Elastic / fault-tolerance policies that are host-side by nature:
+
+* StragglerWatchdog — per-step deadline policy: a step slower than
+  ``factor`` x the running median marks a straggler event; at three
+  consecutive events the policy escalates to 'redispatch' (on a real
+  cluster: preempt + reschedule from the last checkpoint — here the decision
+  logic is what we implement and test).
+* reshard — elastic resume: place a restored pytree onto a (possibly
+  different-sized) mesh with the standard param sharding rules, enabling
+  restarts with a different data-parallel extent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Any
+
+import jax
+
+from repro.distributed.sharding import param_shardings
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    dt: float
+    median: float
+    action: str  # 'warn' | 'redispatch'
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 3.0, escalate_after: int = 3, window: int = 32):
+        self.factor = factor
+        self.escalate_after = escalate_after
+        self.window = window
+        self._times: list[float] = []
+        self._consecutive = 0
+        self.events: list[StragglerEvent] = []
+
+    def observe(self, dt: float, step: int = -1) -> str | None:
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        if len(self._times) < 5:
+            return None
+        med = statistics.median(self._times)
+        if dt > self.factor * med:
+            self._consecutive += 1
+            action = (
+                "redispatch" if self._consecutive >= self.escalate_after else "warn"
+            )
+            self.events.append(StragglerEvent(step, dt, med, action))
+            return action
+        self._consecutive = 0
+        return None
+
+
+def reshard(tree: Any, mesh) -> Any:
+    """Elastic resume: move a (restored) pytree onto ``mesh`` under the
+    standard sharding rules. Works across different data-axis extents."""
+    return jax.device_put(tree, param_shardings(mesh, tree))

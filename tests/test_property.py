@@ -1,0 +1,109 @@
+"""Hypothesis property-based tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.quant import (
+    QuantSpec,
+    avg_bits_per_param,
+    dequantize,
+    fake_quant,
+    init_qparams,
+    quantize,
+)
+
+BITS = st.sampled_from([2, 3, 4])
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def weight_and_spec(draw):
+    bits = draw(BITS)
+    groups = draw(st.integers(1, 4))
+    g = draw(st.sampled_from([32, 64]))
+    out = draw(st.integers(1, 9))
+    seed = draw(st.integers(0, 2**31 - 1))
+    w = jax.random.normal(jax.random.PRNGKey(seed), (groups * g, out)) * draw(
+        st.floats(0.1, 10.0)
+    )
+    return w, QuantSpec(bits=bits, group_size=g)
+
+
+@given(weight_and_spec())
+@settings(**SETTINGS)
+def test_rtn_error_bounded_by_half_step(ws):
+    """|w - deq(quant(w))| <= s/2 (+eps) everywhere for in-range values."""
+    w, spec = ws
+    s, z = init_qparams(w, spec)
+    w_hat = dequantize(quantize(w, s, z, spec), s, z)
+    err = np.abs(np.asarray(w_hat) - np.asarray(w))
+    bound = np.broadcast_to(np.asarray(s), (s.shape[0], w.shape[0] // s.shape[0], w.shape[1]))
+    assert (err.reshape(bound.shape) <= bound * 0.51 + 1e-6).all()
+
+
+@given(weight_and_spec())
+@settings(**SETTINGS)
+def test_fake_quant_is_idempotent(ws):
+    w, spec = ws
+    s, z = init_qparams(w, spec)
+    once = fake_quant(w, s, z, spec)
+    twice = fake_quant(once, s, z, spec)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-5)
+
+
+@given(weight_and_spec())
+@settings(**SETTINGS)
+def test_codes_within_bit_range(ws):
+    w, spec = ws
+    s, z = init_qparams(w, spec)
+    codes = np.asarray(quantize(w, s, z, spec))
+    assert codes.min() >= 0 and codes.max() <= spec.qmax
+
+
+@given(
+    bits=BITS,
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_pack_unpack_identity(bits, rows, cols, seed):
+    codes = jax.random.randint(
+        jax.random.PRNGKey(seed), (rows * 32, cols), 0, 2**bits, dtype=jnp.int32
+    )
+    back = packing.unpack(packing.pack(codes, bits, axis=0), bits, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+@given(bits=BITS, g=st.sampled_from([32, 64, 128, 256]))
+@settings(**SETTINGS)
+def test_avg_bits_formula(bits, g):
+    """N + (N+16)/g, strictly decreasing in g, > N always (Table 11)."""
+    v = avg_bits_per_param(QuantSpec(bits, g))
+    assert v == bits + (bits + 16) / g
+    assert v > bits
+    if g > 32:
+        assert v < avg_bits_per_param(QuantSpec(bits, g // 2))
+
+
+@given(weight_and_spec(), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ste_gradient_zero_iff_clamped(ws, seed):
+    """Eq. 5: weight gradient mask == in-range mask, elementwise."""
+    w, spec = ws
+    s, z = init_qparams(w, spec)
+    # push some weights far out of range
+    w = w.at[0, 0].set(1e4).at[-1, -1].set(-1e4)
+    g = jax.grad(lambda w_: jnp.sum(fake_quant(w_, s, z, spec)))(w)
+    wg = w.reshape(s.shape[0], -1, w.shape[1])
+    q = jnp.round(wg / s) + z
+    in_range = (q >= 0) & (q <= spec.qmax)
+    np.testing.assert_array_equal(
+        np.asarray(g.reshape(in_range.shape) != 0), np.asarray(in_range)
+    )

@@ -1,0 +1,146 @@
+"""Unit tests for the quantization core: Eq. 1-2 round-trips, the Appendix-B
+STE gradients (Eq. 3-5), packing, and the avg-bits formula (Table 11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.qlinear import (
+    apply_linear,
+    fake_to_quantized,
+    fp_to_fake,
+    init_fp,
+    quantized_weight,
+)
+from repro.core.quant import (
+    QuantSpec,
+    avg_bits_per_param,
+    dequantize,
+    fake_quant,
+    init_qparams,
+    quantize,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("group", [32, 64, -1])
+def test_quant_dequant_bounds(bits, group):
+    spec = QuantSpec(bits=bits, group_size=group)
+    w = jax.random.normal(KEY, (128, 48))
+    s, z = init_qparams(w, spec)
+    codes = quantize(w, s, z, spec)
+    assert codes.min() >= 0 and codes.max() <= spec.qmax
+    w_hat = dequantize(codes, s, z)
+    assert w_hat.shape == w.shape
+    # RTN error bounded by s/2 per element (+ rounding of z: at most one step).
+    wg = w.reshape(spec.n_groups(128), -1, 48)
+    err = jnp.abs(w_hat.reshape(wg.shape) - wg)
+    assert jnp.all(err <= jnp.broadcast_to(s, wg.shape) * 1.01)
+
+
+def test_exactly_representable_weights_roundtrip():
+    spec = QuantSpec(bits=4, group_size=32)
+    s = jnp.full((2, 1, 8), 0.1, jnp.float32)
+    z = jnp.full((2, 1, 8), 7.0, jnp.float32)
+    codes = jax.random.randint(KEY, (2, 32, 8), 0, 16)
+    w = dequantize(codes, s, z)
+    again = quantize(w, s, z, spec)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(codes))
+
+
+def test_fake_quant_matches_quant_dequant():
+    spec = QuantSpec(bits=2, group_size=64)
+    w = jax.random.normal(KEY, (256, 32))
+    s, z = init_qparams(w, spec)
+    fq = fake_quant(w, s, z, spec)
+    qd = dequantize(quantize(w, s, z, spec), s, z)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(qd), atol=1e-6)
+
+
+def test_ste_weight_gradient_eq5():
+    """∂ŵ/∂w = 1 in range, 0 when clamped."""
+    spec = QuantSpec(bits=2, group_size=-1)
+    s = jnp.ones((1, 1, 1), jnp.float32) * 0.5
+    z = jnp.ones((1, 1, 1), jnp.float32) * 1.0  # range covers w/s in [-1, 2]
+    w = jnp.array([[0.2], [5.0], [-3.0]], jnp.float32).T  # (1,3)? need (in,out)
+    w = jnp.array([[0.2, 5.0, -3.0]], jnp.float32).T  # (3,1) in=3 -> g=-1 group=3
+    g = jax.grad(lambda w_: jnp.sum(fake_quant(w_, s, z, spec)))(w)
+    # w/s = [0.4, 10, -6]; +z -> [1.4, 11, -5]; clamp to [0,3]: in, above, below
+    np.testing.assert_allclose(np.asarray(g[:, 0]), [1.0, 0.0, 0.0], atol=1e-6)
+
+
+def test_ste_step_size_gradient_eq3():
+    spec = QuantSpec(bits=2, group_size=-1)
+    s = jnp.full((1, 1, 1), 0.5, jnp.float32)
+    z = jnp.full((1, 1, 1), 1.0, jnp.float32)
+    w = jnp.array([[0.2, 5.0, -3.0]], jnp.float32).T
+    ds = jax.grad(lambda s_: jnp.sum(fake_quant(w, s_, z, spec)))(s)
+    # in-range: round(v) - v = 0 - 0.4 = -0.4 ; above: qmax - z = 2 ; below: -z = -1
+    np.testing.assert_allclose(np.asarray(ds).ravel()[0], -0.4 + 2.0 - 1.0, atol=1e-5)
+
+
+def test_ste_zero_point_gradient_eq4():
+    spec = QuantSpec(bits=2, group_size=-1)
+    s = jnp.full((1, 1, 1), 0.5, jnp.float32)
+    z = jnp.full((1, 1, 1), 1.0, jnp.float32)
+    w = jnp.array([[0.2, 5.0, -3.0]], jnp.float32).T
+    dz = jax.grad(lambda z_: jnp.sum(fake_quant(w, s, z_, spec)), argnums=0)(z)
+    # in-range: 0 ; out-of-range: -s each (two clamped elements)
+    np.testing.assert_allclose(np.asarray(dz).ravel()[0], -0.5 * 2, atol=1e-5)
+
+
+def test_e2e_qp_gradient_is_wq_minus_z():
+    """In quantized mode ∂ŵ/∂s = (w_q - z) exactly (Sec. 3.3)."""
+    spec = QuantSpec(bits=2, group_size=32)
+    p = init_fp(KEY, 32, 4)
+    p = fp_to_fake(p, spec)
+    q = fake_to_quantized(p, spec)
+
+    def loss(s):
+        qq = dict(q, s=s)
+        return jnp.sum(quantized_weight(qq, spec))
+
+    ds = jax.grad(loss)(q["s"])
+    codes = packing.unpack(q["w_packed"], spec.bits, axis=0).reshape(1, 32, 4)
+    expected = jnp.sum(codes.astype(jnp.float32) - q["zq"].astype(jnp.float32),
+                       axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(expected), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_pack_unpack_roundtrip(bits):
+    codes = jax.random.randint(KEY, (96, 20), 0, 2**bits, dtype=jnp.int32)
+    planes = packing.pack(codes, bits, axis=0)
+    assert planes.shape == packing.packed_shape(codes.shape, bits, axis=0)
+    assert planes.dtype == jnp.uint32
+    back = packing.unpack(planes, bits, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_pack_exact_bit_budget():
+    # N bits/value: uint32 words * 32 bits == n_values * bits
+    for bits in (2, 3, 4):
+        shape = packing.packed_shape((960, 7), bits, axis=0)
+        words = np.prod(shape)
+        assert words * 32 == 960 * 7 * bits
+
+
+def test_modes_agree_after_conversion():
+    spec = QuantSpec(bits=4, group_size=32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    p = init_fp(KEY, 64, 16, use_bias=True)
+    pf = fp_to_fake(p, spec)
+    y_fake = apply_linear(pf, x, spec, "fake_quant")
+    pq = fake_to_quantized(pf, spec)
+    y_q = apply_linear(pq, x, spec, "quantized")
+    np.testing.assert_allclose(np.asarray(y_fake), np.asarray(y_q), atol=1e-5)
+
+
+def test_avg_bits_formula_table11():
+    assert np.isclose(avg_bits_per_param(QuantSpec(2, 64)), 2.28125)
+    assert np.isclose(avg_bits_per_param(QuantSpec(4, 128)), 4.15625)
+    assert np.isclose(avg_bits_per_param(QuantSpec(3, 32)), 3.59375)
+    assert avg_bits_per_param(QuantSpec(2, -1)) == 2.0

@@ -1,0 +1,76 @@
+"""Roofline machinery: HLO collective parsing, extrapolation math, and the
+analytic model-FLOPs accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import roofline
+from repro.configs import get_config
+
+SAMPLE_HLO = """
+HloModule test
+fused_computation {
+  p0 = f32[128,256]{1,0} parameter(0)
+}
+ENTRY main {
+  %p = bf16[16,1024]{1,0} parameter(0)
+  %ag = bf16[16,16384]{1,0} all-gather(%p), dimensions={1}
+  %ar = f32[256,128]{1,0} all-reduce(%x), to_apply=add
+  %rs = f32[16,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = u32[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = bf16[8,8]{1,0} all-to-all(%w), dimensions={0}
+  ROOT %t = f32[] constant(0)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    d = roofline.collective_bytes(SAMPLE_HLO)
+    assert d["all-gather"] == 16 * 16384 * 2
+    assert d["all-reduce"] == 256 * 128 * 4 * 2  # 2x for ring RS+AG
+    assert d["reduce-scatter"] == 16 * 128 * 4
+    assert d["collective-permute"] == 64 * 4
+    assert d["all-to-all"] == 8 * 8 * 2
+
+
+def test_extrapolation_linear():
+    a = roofline.Roofline(flops=10.0, hbm_bytes=100.0, coll_bytes=4.0,
+                          coll_detail={"all-gather": 4.0})
+    b = roofline.Roofline(flops=16.0, hbm_bytes=130.0, coll_bytes=6.0,
+                          coll_detail={"all-gather": 6.0})
+    full = roofline.extrapolate(a, b, n_periods=10)
+    assert full.flops == 10 + 9 * 6
+    assert full.hbm_bytes == 100 + 9 * 30
+    assert full.coll_detail["all-gather"] == 4 + 9 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = roofline.Roofline(
+        flops=roofline.PEAK_FLOPS, hbm_bytes=roofline.HBM_BW * 2,
+        coll_bytes=roofline.ICI_BW * 0.5, coll_detail={},
+    )
+    assert np.isclose(r.t_compute, 1.0) and np.isclose(r.t_memory, 2.0)
+    assert r.bottleneck == "memory" and np.isclose(r.t_step, 2.0)
+
+
+def test_active_params_sane():
+    """Analytic counts in the right ballpark for known models."""
+    yi = roofline.active_params(get_config("yi-6b"))
+    assert 5.5e9 < yi + 2 * 64000 * 4096 < 7.0e9  # ~6B with embeddings
+    llama2 = roofline.active_params(get_config("llama-2-7b"))
+    assert 6.0e9 < llama2 + 2 * 32000 * 4096 < 7.5e9
+    nemotron = roofline.active_params(get_config("nemotron-4-340b"))
+    assert 3.0e11 < nemotron < 3.6e11
+    # MoE: active << total
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    active = roofline.active_params(phi)
+    total_experts = phi.n_layers * 3 * phi.d_model * phi.d_ff * phi.n_experts
+    assert active < 0.35 * total_experts
+
+
+def test_model_flops_decode_head_dominates():
+    cfg = get_config("qwen1.5-4b")
+    f = roofline.model_flops(cfg, batch=128, seq=32768, kind="decode")
+    head = 2 * 128 * cfg.vocab * cfg.d_model
+    assert f > head  # includes body + head
+    assert head / f > 0.05  # head is a visible fraction at decode
