@@ -15,6 +15,7 @@ from benchmarks import (
     table10_speedup,
     table11_model_size,
     table12_group_size,
+    table13_ragged_serving,
     roofline_table,
 )
 
@@ -27,6 +28,7 @@ ALL = {
     "table10": table10_speedup.main,
     "table11": table11_model_size.main,
     "table12": table12_group_size.main,
+    "table13": table13_ragged_serving.main,
     "roofline": roofline_table.main,
 }
 

@@ -14,7 +14,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import packing
-from repro.core.quant import QuantSpec, init_qparams, quantize
+from repro.core.quant import QuantSpec, avg_bits_per_param, init_qparams, quantize
 from repro.kernels import ref
 from repro.kernels.quant_matmul import quant_matmul as qmm
 
@@ -34,9 +34,11 @@ def main():
     for bits in (2, 3, 4):
         spec = QuantSpec(bits=bits, group_size=64)
         for name, out_c, in_c in SHAPES:
-            # memory-bound decode GEMV: weight bytes dominate
+            # memory-bound decode GEMV: weight bytes dominate. avg_bits_per_param
+            # covers codes + per-group FP16 scale + N-bit zero point (Appendix E),
+            # so the byte count tracks the actual bits/group_size of the spec.
             fp16_bytes = in_c * out_c * 2
-            q_bytes = in_c * out_c * bits / 8 + (in_c // 64) * out_c * (2 + 0.5)
+            q_bytes = in_c * out_c * avg_bits_per_param(spec) / 8
             t_fp16 = fp16_bytes / HBM_BW * 1e6
             t_q = q_bytes / HBM_BW * 1e6
             common.emit(

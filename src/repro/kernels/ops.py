@@ -1,8 +1,18 @@
 """Public jit'd wrappers around the Pallas kernels. These adapt model-side
 shapes ((B, S, d) activations, QuantSpec) to kernel-side layouts and pick
 interpret mode automatically (interpret=True off-TPU so CPU tests execute
-the kernel bodies)."""
+the kernel bodies).
+
+The wrappers really are jitted: ``QuantSpec`` is a frozen (hashable)
+dataclass passed as a static argument, so the shape/tile logic below runs
+once per (shapes, spec) combination at trace time and the compiled
+executable is cached — repeated decode calls don't re-trace. Backend
+detection happens at trace time too, which is safe because the backend is
+fixed for the life of the process.
+"""
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +26,7 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@partial(jax.jit, static_argnums=(4,))
 def quant_matmul(
     x: jax.Array, w_packed: jax.Array, s: jax.Array, zq: jax.Array, spec: QuantSpec
 ) -> jax.Array:
@@ -47,6 +58,7 @@ def quant_matmul(
     return y.reshape(*lead, n)
 
 
+@partial(jax.jit, static_argnums=(3,))
 def fused_fake_quant(w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec) -> jax.Array:
     """Forward-only fused quant-dequant (Block-AP eval path)."""
     return _fq_kernel.fake_quant(

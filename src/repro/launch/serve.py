@@ -1,5 +1,6 @@
 """Serving launcher: spin up the continuous-batching engine on a quantized
-smoke model and stream batched synthetic requests through it.
+smoke model and stream ragged synthetic requests through it (prompts of
+mixed lengths, per-slot decode positions, optional temperature sampling).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8
 """
@@ -23,17 +24,24 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, slots=args.slots, max_len=args.max_len)
+    engine = Engine(
+        model, params, slots=args.slots, max_len=args.max_len,
+        temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
+    )
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, size=12).astype(np.int32)
+        plen = int(rng.integers(4, 24))  # ragged prompt lengths
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
         r = Request(rid=rid, prompt=prompt, max_new=args.max_new)
         reqs.append(r)
         engine.submit(r)

@@ -34,15 +34,15 @@ def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
 
 
 def _sdpa(q, k, v, *, causal, q_pos, kv_len_mask=None):
-    """q: (B,Sq,K,G,hd); k,v: (B,Sk,K,hd). Returns (B,Sq,K,G,hd)."""
+    """q: (B,Sq,K,G,hd); k,v: (B,Sk,K,hd); q_pos: (B,Sq). Returns (B,Sq,K,G,hd)."""
     hd = q.shape[-1]
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / (hd**0.5)
     scores = scores.astype(jnp.float32)
     sk = k.shape[1]
     if causal:
         kv_pos = jnp.arange(sk)
-        mask = q_pos[:, None] >= kv_pos[None, :]  # (Sq, Sk)
-        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        mask = q_pos[:, :, None] >= kv_pos[None, None, :]  # (B, Sq, Sk)
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     if kv_len_mask is not None:  # (B, Sk) valid mask (decode w/ cache)
         scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
@@ -58,7 +58,7 @@ def _sdpa_chunked(q, k, v, *, causal, q_pos, chunk):
         return _sdpa(q, k, v, causal=causal, q_pos=q_pos)
     n = sq // chunk
     qc = q.reshape(b, n, chunk, kh, g, hd).swapaxes(0, 1)
-    pc = q_pos.reshape(n, chunk)
+    pc = q_pos.reshape(b, n, chunk).swapaxes(0, 1)  # (n, B, chunk)
 
     def one(args):
         qq, pp = args
@@ -91,7 +91,7 @@ def attn_apply(
     *,
     kv_src: jax.Array | None = None,  # cross-attention source (None = self)
     cache: dict | None = None,  # {'k','v'} (B, S_cache, K, hd) [+ cross: fixed]
-    pos: jax.Array | int = 0,  # first position of x
+    pos: jax.Array | int = 0,  # first position of x: scalar or per-row (B,)
     causal: bool = True,
     make_cache: bool = False,
     is_cross: bool = False,  # cross-attn even when kv_src is None (decode)
@@ -105,7 +105,10 @@ def attn_apply(
 
     q = _split_heads(linear(p["wq"], x, cfg), h, hd)
     q = lc(q, "batch", None, "heads", None)  # seq stays whole inside attention
-    q_pos = pos + jnp.arange(sq)
+    # Positions are per-row: a scalar `pos` broadcasts to (B,) so ragged decode
+    # (every batch row at its own cache offset) and aligned prefill share code.
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    q_pos = pos_vec[:, None] + jnp.arange(sq)[None, :]  # (B, Sq)
 
     if cross and cache is not None:
         # Cross K/V were computed at prefill and are immutable.
@@ -120,18 +123,24 @@ def attn_apply(
         k = lc(k, "batch", None, "kv_heads", None)
         v = lc(v, "batch", None, "kv_heads", None)
         if not cross:
-            q = apply_rope(q, q_pos[None, :], cfg.rope_theta)
-            k = apply_rope(k, (pos + jnp.arange(k.shape[1]))[None, :], cfg.rope_theta)
+            q = apply_rope(q, q_pos, cfg.rope_theta)
+            k_pos = pos_vec[:, None] + jnp.arange(k.shape[1])[None, :]
+            k = apply_rope(k, k_pos, cfg.rope_theta)
         kv_mask = None
         if cache is not None and not cross:
-            #
+            # Decode: write each row's new K/V at that row's own position
+            # (batched dynamic_update_slice via vmap -> scatter), then attend
+            # over the whole cache under a per-row validity mask.
+            def row_write(c_row, new_row, p):
+                return jax.lax.dynamic_update_slice(
+                    c_row, new_row.astype(c_row.dtype), (p, 0, 0)
+                )
 
-            # Decode: write new K/V at `pos`, attend over the whole cache.
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            ck = jax.vmap(row_write)(cache["k"], k, pos_vec)
+            cv = jax.vmap(row_write)(cache["v"], v, pos_vec)
             k, v = ck, cv
             new_cache = {"k": ck, "v": cv}
-            kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos + sq - 1)
+            kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos_vec[:, None] + sq - 1)
             causal = False  # handled by kv_mask for single-step decode
         elif make_cache:
             new_cache = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}

@@ -121,11 +121,17 @@ def _apply_slot(
             make_cache=make_cache, is_cross=True,
         )
     elif mx == "mamba":
-        y, nc = ssm.mamba_apply(p["mixer"], cfg, x, state=c_mix, make_cache=make_cache)
+        y, nc = ssm.mamba_apply(
+            p["mixer"], cfg, x, state=c_mix, pos=pos, make_cache=make_cache
+        )
     elif mx == "mlstm":
-        y, nc = xlstm.mlstm_apply(p["mixer"], cfg, x, state=c_mix, make_cache=make_cache)
+        y, nc = xlstm.mlstm_apply(
+            p["mixer"], cfg, x, state=c_mix, pos=pos, make_cache=make_cache
+        )
     elif mx == "slstm":
-        y, nc = xlstm.slstm_apply(p["mixer"], cfg, x, state=c_mix, make_cache=make_cache)
+        y, nc = xlstm.slstm_apply(
+            p["mixer"], cfg, x, state=c_mix, pos=pos, make_cache=make_cache
+        )
     else:
         raise ValueError(mx)
     h = h + y
@@ -367,7 +373,15 @@ class Model:
     def decode_step(
         self, params: Params, cache: Params, tokens: jax.Array, pos
     ) -> tuple[jax.Array, Params]:
-        """One decode step. tokens: (B, 1); pos: scalar index into the cache."""
+        """One decode step for a (possibly ragged) batch.
+
+        tokens: (B, 1) next input token per row.
+        pos: (B,) per-row cache write position — row i's new K/V lands at
+          ``pos[i]`` and its query rotates at position ``pos[i]``, so batch
+          rows may sit at arbitrary, different sequence offsets (continuous
+          batching with staggered admission). A scalar ``pos`` is accepted
+          and broadcast for the aligned-batch case.
+        """
         cfg = self.cfg
         h = embed(params["embed"], tokens, cfg.dtype)
         stack = params["dec"] if cfg.family == "encdec" else params["layers"]

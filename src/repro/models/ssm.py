@@ -71,9 +71,12 @@ def mamba_apply(
     x: jax.Array,
     *,
     state: dict | None = None,
+    pos: jax.Array | int = 0,  # (B,) absolute positions; unused (position-free
+    # recurrence) but part of the uniform mixer signature for ragged decode
     make_cache: bool = False,
 ) -> tuple[jax.Array, dict | None]:
     """x: (B,S,d). state: {'h': (B,di,N), 'conv': (B,dconv-1,di)} for decode."""
+    del pos  # recurrent state carries all positional information
     b, s, _ = x.shape
     di, _, n = mamba_dims(cfg)
     xz = linear(p["in_proj"], x, cfg)

@@ -49,8 +49,11 @@ def mlstm_apply(
     x: jax.Array,
     *,
     state: dict | None = None,
+    pos: jax.Array | int = 0,  # (B,) absolute positions; unused (position-free
+    # recurrence) but part of the uniform mixer signature for ragged decode
     make_cache: bool = False,
 ) -> tuple[jax.Array, dict | None]:
+    del pos  # recurrent state carries all positional information
     b, s, d = x.shape
     h = cfg.n_heads
     dh = d // h
@@ -161,8 +164,11 @@ def slstm_apply(
     x: jax.Array,
     *,
     state: dict | None = None,
+    pos: jax.Array | int = 0,  # (B,) absolute positions; unused (position-free
+    # recurrence) but part of the uniform mixer signature for ragged decode
     make_cache: bool = False,
 ) -> tuple[jax.Array, dict | None]:
+    del pos  # recurrent state carries all positional information
     b, s, d = x.shape
     h = cfg.n_heads
     dh = d // h

@@ -1,12 +1,28 @@
 """Batched serving engine over packed low-bit weights (the deployment story
 of the paper: uniform quantization -> simple fused dequant kernels, Table 10).
 
-Continuous-batching-lite: a fixed pool of B cache slots; finished sequences
-free their slot and queued prompts are prefilled into it. One jitted
-decode_step serves the whole pool every tick; per-slot positions are tracked
-host-side (pos passed as the max — each slot masks by its own valid length
-via the cache content, single-step semantics keep this exact for the common
-aligned-batch case exercised in tests)."""
+Continuous batching with **ragged per-slot positions**: a fixed pool of B
+cache slots; finished sequences free their slot (cache state is reset to its
+init values so stale KV can never leak into the next occupant) and queued
+prompts are prefilled into it at any tick. One jitted decode_step serves the
+whole pool every tick.
+
+Position convention: ``self.pos`` is a ``(B,)`` int32 vector — ``pos[i]`` is
+slot *i*'s next cache write offset — and is passed to
+``Model.decode_step(params, cache, tokens, pos)`` as-is. Every slot therefore
+decodes at its own true sequence position (RoPE rotation, KV write offset,
+and KV validity mask are all per-row), so under greedy decoding
+(``temperature=0``) staggered admission is exactly equivalent to running
+each request alone at batch size 1. At ``temperature > 0`` the per-token
+*distributions* still match batch-1 serving, but sampled draws come from a
+single shared host RNG in slot-interleaved order, so concrete token
+sequences differ from a solo run with the same seed.
+
+Sampling: greedy (``temperature=0``, the default) or softmax sampling at
+``temperature > 0`` with a host-side seeded generator. Generation stops at
+``max_new`` tokens, at cache capacity, or when ``eos_id`` is produced (the
+EOS token is appended to ``Request.out`` before the request is marked done).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -31,30 +47,53 @@ class Request:
 
 
 class Engine:
-    def __init__(self, model: Model, params: Params, *, slots: int, max_len: int):
+    def __init__(
+        self,
+        model: Model,
+        params: Params,
+        *,
+        slots: int,
+        max_len: int,
+        temperature: float = 0.0,
+        eos_id: int | None = None,
+        seed: int = 0,
+    ):
         assert model.cfg.is_causal_lm, "serving engine targets decoder LMs"
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.temperature = float(temperature)
+        self.eos_id = eos_id
         self.cache = model.init_cache(slots, max_len, src_len=model.cfg.n_vision_tokens)
+        # one-slot template of the init cache state, written back on free
+        self._fresh = model.init_cache(1, max_len, src_len=model.cfg.n_vision_tokens)
         self.pos = np.zeros(slots, np.int32)  # next write position per slot
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
+        self._rng = np.random.default_rng(seed)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
 
     # -- admission -------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} must be < max_len={self.max_len} "
+                "(the cache needs at least one free position to decode into)"
+            )
         self.queue.append(req)
 
     def _admit(self) -> None:
         for i in range(self.slots):
-            if self.active[i] is None and self.queue:
+            while self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self._prefill_into(i, req)
-                self.active[i] = req
+                if req.done:  # prompt immediately hit EOS / budget
+                    self._reset_slot(i)
+                else:
+                    self.active[i] = req
 
     def _prefill_into(self, slot: int, req: Request) -> None:
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
@@ -74,31 +113,62 @@ class Engine:
 
         self.cache = jax.tree.map(write, self.cache, pcache)
         self.pos[slot] = s
-        req.out.append(int(jnp.argmax(logits[0, -1])))
+        tok = self._sample(np.asarray(logits[0, -1]))
+        req.out.append(tok)
+        if (self.eos_id is not None and tok == self.eos_id) or len(req.out) >= req.max_new:
+            req.done = True
+
+    def _reset_slot(self, slot: int) -> None:
+        """Restore a freed slot's cache rows to their init values so stale KV /
+        recurrent state cannot influence a newly admitted request.
+
+        Defense-in-depth: the per-row kv validity mask and the prefill
+        overwrite already hide a predecessor's state from the decode math;
+        the reset guarantees it at the buffer level as well."""
+
+        def write(full, fresh):
+            idx = (0, slot) + (0,) * (fresh.ndim - 2)
+            return jax.lax.dynamic_update_slice(full, fresh.astype(full.dtype), idx)
+
+        self.cache = jax.tree.map(write, self.cache, self._fresh)
+        self.pos[slot] = 0
+
+    # -- sampling ----------------------------------------------------------------
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        """Greedy at temperature 0, else temperature-scaled softmax sampling."""
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(p.shape[0], p=p))
 
     # -- decode tick -------------------------------------------------------------
 
     def step(self) -> None:
         self._admit()
-        if not any(self.active):
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
             return
         tokens = np.zeros((self.slots, 1), np.int32)
-        for i, req in enumerate(self.active):
-            if req is not None and req.out:
-                tokens[i, 0] = req.out[-1]
-        pos = int(self.pos.max())
+        for i in live:
+            tokens[i, 0] = self.active[i].out[-1]
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), pos
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.pos)
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            req.out.append(int(nxt[i]))
+        logits_np = np.asarray(logits[:, 0, :])
+        for i in live:  # empty slots' outputs are never decoded
+            req = self.active[i]
+            tok = self._sample(logits_np[i])
+            req.out.append(tok)
             self.pos[i] += 1
-            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
                 req.done = True
                 self.active[i] = None
+                self._reset_slot(i)
 
     def run(self, max_ticks: int = 256) -> None:
         for _ in range(max_ticks):
