@@ -16,6 +16,7 @@ from benchmarks import (
     table11_model_size,
     table12_group_size,
     table13_ragged_serving,
+    table14_paged_serving,
     roofline_table,
 )
 
@@ -29,6 +30,7 @@ ALL = {
     "table11": table11_model_size.main,
     "table12": table12_group_size.main,
     "table13": table13_ragged_serving.main,
+    "table14": table14_paged_serving.main,
     "roofline": roofline_table.main,
 }
 

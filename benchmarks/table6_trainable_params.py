@@ -30,7 +30,7 @@ def main():
         from repro.models.common import qspec
 
         fake = fp_tree_to_fake(
-            jax.tree.map(lambda l: l[0], fp_params["layers"]),
+            jax.tree.map(lambda x: x[0], fp_params["layers"]),
             qspec(cfg_q), variant,
         )
         names = TRAINABLE_LEAVES[variant]

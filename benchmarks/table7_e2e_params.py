@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from benchmarks import common
 from repro.core.block_ap import BlockAPConfig
-from repro.core.e2e_qp import E2EQPConfig, run_e2e_qp, prepare_params
+from repro.core.e2e_qp import E2EQPConfig, run_e2e_qp
 from repro.core.pipeline import run_block_ap
 from repro.core.quant import QuantSpec, avg_bits_per_param
 from repro.data import synthetic

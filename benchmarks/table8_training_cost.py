@@ -11,7 +11,7 @@ from repro.core.e2e_qp import E2EQPConfig, make_step, run_e2e_qp
 from repro.core.pipeline import run_block_ap
 from repro.data import synthetic
 from repro.models.model import Model
-from repro.optim import count, partition, path_mask
+from repro.optim import count
 
 
 def main():

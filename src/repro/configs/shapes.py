@@ -59,8 +59,6 @@ def input_specs(cfg: ModelConfig, shape_name: str, *, scale: float = 1.0) -> dic
     sh = SHAPES[shape_name]
     b = max(int(sh.batch * scale), 1)
     s = sh.seq
-    model = Model(cfg)
-
     if sh.kind == "train":
         if cfg.family == "encdec":
             half = s // 2

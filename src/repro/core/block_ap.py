@@ -34,11 +34,11 @@ class BlockAPConfig:
 
 
 def _tree_idx(tree: Params, i: int) -> Params:
-    return jax.tree.map(lambda l: l[i], tree)
+    return jax.tree.map(lambda x: x[i], tree)
 
 
 def _tree_set(tree: Params, i: int, sub: Params) -> Params:
-    return jax.tree.map(lambda l, s: l.at[i].set(s.astype(l.dtype)), tree, sub)
+    return jax.tree.map(lambda x, s: x.at[i].set(s.astype(x.dtype)), tree, sub)
 
 
 def _collect_targets(layers, layout, cfg, h0, kv_src, causal):
@@ -91,7 +91,6 @@ def block_ap(
     spec = qspec(cfg_q)
     variant = cfg_q.fq_variant
     cfg_fp = model_fp.cfg
-    model_q = Model(cfg_q)
 
     out_params = dict(fp_params)
     stats: dict[str, list] = {"recon_loss": []}

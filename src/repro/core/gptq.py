@@ -122,7 +122,7 @@ def gptq_dense_model(model_fp, fp_params, calib_batch, spec):
     out_layers = None
     jcap = jax.jit(capture_block)
     for pidx in range(n_periods):
-        slot = jax.tree.map(lambda l: l[pidx], layers)["s0"]
+        slot = jax.tree.map(lambda x: x[pidx], layers)["s0"]
         _, caps = jcap(slot, h)
         q_slot = {}
         for key, sub in slot.items():
@@ -151,7 +151,7 @@ def gptq_dense_model(model_fp, fp_params, calib_batch, spec):
         )(q_slot, h)
         if out_layers is None:
             out_layers = jax.tree.map(
-                lambda l: jnp.zeros((n_periods, *l.shape), l.dtype), q_slot
+                lambda x: jnp.zeros((n_periods, *x.shape), x.dtype), q_slot
             )
         out_layers = jax.tree.map(lambda st, sl: st.at[pidx].set(sl), out_layers, q_slot)
 

@@ -10,7 +10,6 @@ framework. One parameter pytree, three modes:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -36,9 +36,13 @@ def fake_quant(
     group: int,
     bg: int = 8,
     bn: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """w: (K, N); s/z: (K/g, 1, N) -> fake-quantized (K, N) in w.dtype."""
+    """w: (K, N); s/z: (K/g, 1, N) -> fake-quantized (K, N) in w.dtype.
+
+    ``interpret`` defaults to compiled on TPU and interpreter elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     k, n = w.shape
     g = k if group == -1 else group
     ngroups = k // g

@@ -1,0 +1,133 @@
+"""Paged-attention decode Pallas TPU kernel: one query token per sequence
+attends over that sequence's *live* KV blocks only, gathered through its
+block table (the vLLM design mapped onto TPU).
+
+Layout: the KV cache is a global pool of fixed-size pages
+``k_pages/v_pages: (num_blocks, block_size, K, hd)`` shared by every slot;
+``block_tables: (B, max_blocks) int32`` maps a slot's logical block index to
+a physical page, and ``lengths: (B,)`` is each row's live KV length. Both
+host-side arrays ride in as **scalar prefetch** operands
+(``PrefetchScalarGridSpec``) so the BlockSpec index map can route each grid
+step's HBM->VMEM DMA to the right physical page — the kernel never touches
+pages the row doesn't own, so decode bytes scale with the actual sequence
+length instead of ``max_len``.
+
+Grid: (B, K, max_blocks) with the block axis innermost; fp32 running
+(m, l, acc) streaming-softmax scratch in VMEM, blocks past ``lengths[b]``
+skipped via ``pl.when``. GQA is native: the grid walks KV heads and each
+step computes all G query heads of that group against one page.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    bt_ref,  # (B, max_blocks) int32 scalar-prefetch: block tables
+    len_ref,  # (B,) int32 scalar-prefetch: live KV length per row
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, bs, 1, hd) — one physical page, one KV head
+    v_ref,  # (1, bs, 1, hd)
+    o_ref,  # (1, 1, G, hd)
+    m_ref,  # (G,) f32 running max
+    l_ref,  # (G,) f32 running sum
+    acc_ref,  # (G, hd) f32 accumulator
+    *,
+    scale: float,
+    bs: int,
+    nb: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * bs < length)  # skip pages beyond the row's live KV
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
+        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bs), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _fini():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jax.Array,  # (B, K, G, hd) — one decode token per row
+    k_pages: jax.Array,  # (num_blocks, block_size, K, hd)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks) int32 physical page ids
+    lengths: jax.Array,  # (B,) int32 live KV length (incl. current token)
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token decode attention over a paged KV pool. Returns (B, K, G, hd).
+
+    Rows may sit at arbitrary lengths; entries of ``block_tables`` past a
+    row's live blocks must still be *valid* page ids (the pool reserves page
+    0 as a null page for exactly this) — their loads are masked, never used.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, kh, g, hd = q.shape
+    _, bs, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    scale = hd**-0.5
+
+    def q_index(bb, h, j, bt, ln):
+        return (bb, h, 0, 0)
+
+    def kv_index(bb, h, j, bt, ln):
+        return (bt[bb, j], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), q_index),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bs=bs, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)

@@ -59,10 +59,15 @@ def quant_matmul(
     bm: int = 128,
     bk: int = 256,
     bn: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """y = x @ dequant(w_packed, s, zq).  x: (M, K); w_packed: (K/32, bits, N);
-    s: (K/g, 1, N) f32; zq: (K/g, 1, N) int32. Returns (M, N) in x.dtype."""
+    s: (K/g, 1, N) f32; zq: (K/g, 1, N) int32. Returns (M, N) in x.dtype.
+
+    ``interpret`` defaults to compiled on TPU and interpreter elsewhere
+    (matching ``attention._flash``); pass explicitly to override."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = x.shape
     n = w_packed.shape[-1]
     g = k if group == -1 else group

@@ -43,6 +43,30 @@ def quant_matmul_ref(
     return y.astype(x.dtype)
 
 
+def paged_attention_ref(
+    q: jax.Array,  # (B, K, G, hd)
+    k_pages: jax.Array,  # (num_blocks, block_size, K, hd)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks) int32
+    lengths: jax.Array,  # (B,) live KV length per row
+) -> jax.Array:
+    """Pure-JAX paged decode attention: gather each row's pages through its
+    block table, mask positions >= lengths[b], fp32 softmax. (B, K, G, hd)."""
+    nb, bs, kh, hd = k_pages.shape
+    bt = block_tables.astype(jnp.int32)
+    k = jnp.take(k_pages, bt, axis=0)  # (B, max_blocks, bs, K, hd)
+    v = jnp.take(v_pages, bt, axis=0)
+    b, nbm = bt.shape
+    k = k.reshape(b, nbm * bs, kh, hd)
+    v = v.reshape(b, nbm * bs, kh, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", q, k) / (hd**0.5)
+    scores = scores.astype(jnp.float32)
+    valid = jnp.arange(nbm * bs)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgs,bskd->bkgd", w, v)
+
+
 def fake_quant_ref(w: jax.Array, s: jax.Array, z: jax.Array, bits: int) -> jax.Array:
     """Group-wise fake-quant: w (K, N), s/z (K//g, 1, N) -> (K, N), w.dtype."""
     g = w.shape[0] // s.shape[0]

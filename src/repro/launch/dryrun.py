@@ -17,13 +17,11 @@ import pathlib
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import roofline
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, applicable, input_specs
-from repro.core.e2e_qp import E2EQPConfig, make_step
 from repro.distributed.sharding import axis_rules, logical_to_spec, param_shardings
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model

@@ -15,6 +15,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.model import Model
 from repro.serve.engine import Engine, Request
+from repro.serve.paged_kv import PagedEngine
 
 
 def main():
@@ -27,15 +28,22 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV engine (block tables)")
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(
-        model, params, slots=args.slots, max_len=args.max_len,
+    kw = dict(
+        slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
     )
+    if args.paged:
+        engine = PagedEngine(model, params, block_size=args.block_size, **kw)
+    else:
+        engine = Engine(model, params, **kw)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -53,6 +61,7 @@ def main():
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU interpret)")
+    print(f"stats: {engine.stats.summary()}")
 
 
 if __name__ == "__main__":

@@ -84,6 +84,23 @@ def _flash(q, k, v, cfg):
     return of.reshape(b, h, sq, hd).swapaxes(1, 2).reshape(b, sq, kh, g, hd)
 
 
+def _paged_attention(q, k_pages, v_pages, block_tables, lengths, cfg):
+    """Dispatch paged decode attention: Pallas kernel on TPU (or when forced
+    via ``cfg.paged_attn_impl='pallas'``, interpreted off-TPU), pure-JAX
+    gather reference otherwise (CPU tests)."""
+    impl = cfg.paged_attn_impl
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from repro.kernels.paged_attention import paged_attention
+
+        return paged_attention(
+            q, k_pages, v_pages, block_tables, lengths,
+            interpret=jax.default_backend() != "tpu",
+        )
+    from repro.kernels.ref import paged_attention_ref
+
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths)
+
+
 def attn_apply(
     p: dict,
     cfg: ModelConfig,
@@ -95,6 +112,7 @@ def attn_apply(
     causal: bool = True,
     make_cache: bool = False,
     is_cross: bool = False,  # cross-attn even when kv_src is None (decode)
+    block_tables: jax.Array | None = None,  # (B, max_blocks) paged decode only
 ) -> tuple[jax.Array, dict | None]:
     h, kheads, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     b, sq, _ = x.shape
@@ -127,6 +145,37 @@ def attn_apply(
             k_pos = pos_vec[:, None] + jnp.arange(k.shape[1])[None, :]
             k = apply_rope(k, k_pos, cfg.rope_theta)
         kv_mask = None
+        if cache is not None and not cross and "k_pages" in cache:
+            # Paged decode: the KV cache is a pool of fixed-size pages shared
+            # by all slots. Write the new K/V at each row's frontier page
+            # (block-table lookup + flat scatter), then attend over only that
+            # row's live pages. Empty rows index the reserved null page 0.
+            if sq != 1:
+                raise ValueError("paged KV cache supports single-token decode only")
+            if block_tables is None:
+                raise ValueError("paged cache needs block_tables")
+            kp, vp = cache["k_pages"], cache["v_pages"]
+            nb, bs_pg = kp.shape[0], kp.shape[1]
+            blk = jnp.take_along_axis(
+                block_tables, (pos_vec // bs_pg)[:, None], axis=1
+            )[:, 0]
+            flat = blk * bs_pg + pos_vec % bs_pg  # (B,) physical token slots
+            kp = (
+                kp.reshape(nb * bs_pg, kheads, hd)
+                .at[flat].set(k[:, 0].astype(kp.dtype))
+                .reshape(kp.shape)
+            )
+            vp = (
+                vp.reshape(nb * bs_pg, kheads, hd)
+                .at[flat].set(v[:, 0].astype(vp.dtype))
+                .reshape(vp.shape)
+            )
+            new_cache = {"k_pages": kp, "v_pages": vp}
+            qp = q[:, 0].reshape(b, kheads, g, hd)
+            out = _paged_attention(qp, kp, vp, block_tables, pos_vec + 1, cfg)
+            out = out.reshape(b, sq, h * hd)
+            y = linear(p["wo"], out, cfg)
+            return lc(y, "batch", "seq", "embed"), new_cache
         if cache is not None and not cross:
             # Decode: write each row's new K/V at that row's own position
             # (batched dynamic_update_slice via vmap -> scatter), then attend

@@ -106,6 +106,7 @@ def _apply_slot(
     causal: bool,
     kv_src: jax.Array | None,
     make_cache: bool,
+    block_tables: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     x = rmsnorm(p["ln1"], h, cfg.norm_eps)
@@ -113,7 +114,8 @@ def _apply_slot(
     c_mix = cache.get("mixer") if cache else None
     if mx == "attn":
         y, nc = attention.attn_apply(
-            p["mixer"], cfg, x, cache=c_mix, pos=pos, causal=causal, make_cache=make_cache
+            p["mixer"], cfg, x, cache=c_mix, pos=pos, causal=causal,
+            make_cache=make_cache, block_tables=block_tables,
         )
     elif mx == "cross":
         y, nc = attention.attn_apply(
@@ -172,6 +174,7 @@ def apply_period(
     causal: bool = True,
     kv_src: jax.Array | None = None,
     make_cache: bool = False,
+    block_tables: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Apply one period (group of sub-layers) — also the Block-AP unit."""
     new_caches = {}
@@ -188,6 +191,7 @@ def apply_period(
             causal=causal,
             kv_src=kv_src,
             make_cache=make_cache,
+            block_tables=block_tables,
         )
         new_caches[key] = nc
         aux_total = aux_total + aux
@@ -207,6 +211,7 @@ def _run_stack(
     causal: bool = True,
     kv_src: jax.Array | None = None,
     make_cache: bool = False,
+    block_tables: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Scan the period stack. layers/cache leaves have leading n_periods axis."""
 
@@ -216,14 +221,14 @@ def _run_stack(
         def period_fn(slot, hh, c):
             return apply_period(
                 slot, layout, cfg, hh, cache=c, pos=pos, causal=causal,
-                kv_src=kv_src, make_cache=make_cache,
+                kv_src=kv_src, make_cache=make_cache, block_tables=block_tables,
             )
 
         if cfg.remat:  # keep the same remat policy as the scanned path
             period_fn = jax.checkpoint(period_fn, policy=_remat_policy(cfg))
         for i in range(n_periods):
-            slot = jax.tree.map(lambda l: l[i], layers)
-            c = None if cache is None else jax.tree.map(lambda l: l[i], cache)
+            slot = jax.tree.map(lambda x: x[i], layers)
+            c = None if cache is None else jax.tree.map(lambda x: x[i], cache)
             h, nc, aux = period_fn(slot, h, c)
             caches.append(nc)
             aux_tot = aux_tot + aux
@@ -244,6 +249,7 @@ def _run_stack(
             causal=causal,
             kv_src=kv_src,
             make_cache=make_cache,
+            block_tables=block_tables,
         )
         return hh, (new_caches, aux_total)
 
@@ -353,7 +359,6 @@ class Model:
         cfg = self.cfg
         h = embed(params["embed"], batch["tokens"], cfg.dtype)
         kv_src = None
-        extra_cache: Params = {}
         if cfg.family == "encdec":
             kv_src = self._encode(params, batch)
             h, cache, _ = _run_stack(
@@ -371,7 +376,8 @@ class Model:
         return logits, cache
 
     def decode_step(
-        self, params: Params, cache: Params, tokens: jax.Array, pos
+        self, params: Params, cache: Params, tokens: jax.Array, pos,
+        block_tables: jax.Array | None = None,
     ) -> tuple[jax.Array, Params]:
         """One decode step for a (possibly ragged) batch.
 
@@ -381,13 +387,17 @@ class Model:
           rows may sit at arbitrary, different sequence offsets (continuous
           batching with staggered admission). A scalar ``pos`` is accepted
           and broadcast for the aligned-batch case.
+        block_tables: (B, max_blocks) int32, required iff ``cache`` is a
+          paged cache (from :meth:`init_paged_cache`) — maps each row's
+          logical KV block index to a physical page in the shared pool.
         """
         cfg = self.cfg
         h = embed(params["embed"], tokens, cfg.dtype)
         stack = params["dec"] if cfg.family == "encdec" else params["layers"]
         layout = self.dec_layout if cfg.family == "encdec" else self.layout
         h, new_cache, _ = _run_stack(
-            stack, layout, cfg, h, cache=cache, pos=pos, causal=True, kv_src=None
+            stack, layout, cfg, h, cache=cache, pos=pos, causal=True, kv_src=None,
+            block_tables=block_tables,
         )
         h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
         logits = logits_head(params["embed"], h, cfg)
@@ -395,8 +405,23 @@ class Model:
 
     # -- cache construction ---------------------------------------------------
 
-    def init_cache(self, batch: int, cache_len: int, src_len: int = 0) -> Params:
-        """Zero-filled decode cache (used directly as dry-run input spec)."""
+    def init_cache(
+        self,
+        batch: int,
+        cache_len: int,
+        src_len: int = 0,
+        *,
+        kv_pages: tuple[int, int] | None = None,
+    ) -> Params:
+        """Zero-filled decode cache (used directly as dry-run input spec).
+
+        With ``kv_pages=(num_blocks, block_size)`` the self-attention KV
+        leaves become a *paged pool* ``{'k_pages','v_pages'}`` of shape
+        (num_blocks, block_size, K, hd) per period — shared by all slots and
+        indexed through block tables at decode — instead of dense per-slot
+        (batch, cache_len, K, hd) rows. Recurrent states and cross-attention
+        KV stay dense per-slot either way.
+        """
         cfg = self.cfg
         k, hd = cfg.n_kv_heads, cfg.hd
 
@@ -404,8 +429,18 @@ class Model:
             c: Params = {}
             mx = desc["mixer"]
             if mx == "attn":
-                shape = (batch, cache_len, k, hd)
-                c["mixer"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+                if kv_pages is not None:
+                    shape = (*kv_pages, k, hd)
+                    c["mixer"] = {
+                        "k_pages": jnp.zeros(shape, cfg.dtype),
+                        "v_pages": jnp.zeros(shape, cfg.dtype),
+                    }
+                else:
+                    shape = (batch, cache_len, k, hd)
+                    c["mixer"] = {
+                        "k": jnp.zeros(shape, cfg.dtype),
+                        "v": jnp.zeros(shape, cfg.dtype),
+                    }
             elif mx == "cross":
                 shape = (batch, src_len or cfg.n_vision_tokens, k, hd)
                 c["mixer"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
@@ -444,3 +479,13 @@ class Model:
 
         one = {f"s{j}": slot_cache(d) for j, d in enumerate(layout)}
         return jax.tree.map(stacked, one)
+
+    def init_paged_cache(
+        self, batch: int, num_blocks: int, block_size: int, src_len: int = 0
+    ) -> Params:
+        """Decode cache with self-attn KV in a global page pool (see
+        :meth:`init_cache`); ``batch`` sizes the dense per-slot leaves
+        (recurrent states, cross-attention KV) that are not paged."""
+        return self.init_cache(
+            batch, block_size, src_len, kv_pages=(num_blocks, block_size)
+        )

@@ -1,3 +1,16 @@
 from repro.optim.adamw import adamw, apply_updates, clip_by_global_norm
 from repro.optim.partition import count, merge, partition, path_mask
 from repro.optim.schedule import constant, cosine, linear_warmup_cosine
+
+__all__ = [
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "count",
+    "merge",
+    "partition",
+    "path_mask",
+    "constant",
+    "cosine",
+    "linear_warmup_cosine",
+]

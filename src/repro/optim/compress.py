@@ -27,7 +27,8 @@ def compress_grads(grads: Any, err_state: Any) -> tuple[Any, Any, Any]:
         return q, scale, gf - deq
 
     flat = jax.tree.map(one, grads, err_state)
-    is_t = lambda t: isinstance(t, tuple)
+    def is_t(t):
+        return isinstance(t, tuple)
     q = jax.tree.map(lambda t: t[0], flat, is_leaf=is_t)
     s = jax.tree.map(lambda t: t[1], flat, is_leaf=is_t)
     e = jax.tree.map(lambda t: t[2], flat, is_leaf=is_t)

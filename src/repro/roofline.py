@@ -135,8 +135,6 @@ def active_params(cfg) -> float:
         dense_ffn = 3 * d * ff
     else:
         dense_ffn = 2 * d * ff
-    moe_ffn = dense_ffn * (cfg.top_k / max(cfg.n_experts, 1)) * cfg.n_experts \
-        if cfg.n_experts else 0.0  # active = top_k experts
     moe_active = (3 if cfg.act == "swiglu" else 2) * d * ff * cfg.top_k if cfg.n_experts else 0.0
 
     fam = cfg.family

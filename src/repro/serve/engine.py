@@ -46,6 +46,37 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class EngineStats:
+    """Lightweight serving counters, updated on every submit/prefill/tick.
+
+    The paged engine additionally tracks its page pool: ``pages_in_use`` /
+    ``page_high_water`` count physical KV pages (null page excluded) and
+    ``prefix_hits`` counts prompt blocks served from the prefix cache."""
+
+    ticks: int = 0
+    tokens: int = 0  # total generated tokens (prefill sample + decode ticks)
+    occupancy_sum: int = 0  # sum over ticks of live slots (avg = /ticks)
+    queue_high_water: int = 0
+    pages_in_use: int = 0
+    page_high_water: int = 0
+    prefix_hits: int = 0
+
+    def summary(self) -> str:
+        avg_occ = self.occupancy_sum / max(self.ticks, 1)
+        s = (
+            f"ticks={self.ticks} tokens={self.tokens} "
+            f"avg_occupancy={avg_occ:.2f} queue_high_water={self.queue_high_water}"
+        )
+        if self.page_high_water:
+            s += (
+                f" pages_in_use={self.pages_in_use}"
+                f" page_high_water={self.page_high_water}"
+                f" prefix_hits={self.prefix_hits}"
+            )
+        return s
+
+
 class Engine:
     def __init__(
         self,
@@ -65,15 +96,29 @@ class Engine:
         self.max_len = max_len
         self.temperature = float(temperature)
         self.eos_id = eos_id
-        self.cache = model.init_cache(slots, max_len, src_len=model.cfg.n_vision_tokens)
+        self.cache = self._make_cache()
         # one-slot template of the init cache state, written back on free
-        self._fresh = model.init_cache(1, max_len, src_len=model.cfg.n_vision_tokens)
+        self._fresh = self._make_fresh()
         self.pos = np.zeros(slots, np.int32)  # next write position per slot
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
+        self.stats = EngineStats()
         self._rng = np.random.default_rng(seed)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
+
+    def _make_cache(self) -> Params:
+        """Pool-cache constructor hook (the paged engine overrides this)."""
+        return self.model.init_cache(
+            self.slots, self.max_len, src_len=self.model.cfg.n_vision_tokens
+        )
+
+    def _make_fresh(self) -> Params:
+        """One-slot reset-template hook (the paged engine shrinks the
+        self-attn KV leaves it never resets to length 1)."""
+        return self.model.init_cache(
+            1, self.max_len, src_len=self.model.cfg.n_vision_tokens
+        )
 
     # -- admission -------------------------------------------------------------
 
@@ -84,10 +129,15 @@ class Engine:
                 "(the cache needs at least one free position to decode into)"
             )
         self.queue.append(req)
+        self.stats.queue_high_water = max(self.stats.queue_high_water, len(self.queue))
+
+    def _can_admit(self, req: Request) -> bool:
+        """Admission-control hook (the paged engine checks pool headroom)."""
+        return True
 
     def _admit(self) -> None:
         for i in range(self.slots):
-            while self.active[i] is None and self.queue:
+            while self.active[i] is None and self.queue and self._can_admit(self.queue[0]):
                 req = self.queue.pop(0)
                 self._prefill_into(i, req)
                 if req.done:  # prompt immediately hit EOS / budget
@@ -98,6 +148,16 @@ class Engine:
     def _prefill_into(self, slot: int, req: Request) -> None:
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
         logits, pcache = self._prefill(self.params, batch)
+        self._write_prefill(slot, req, pcache)
+        self.pos[slot] = len(req.prompt)
+        tok = self._sample(np.asarray(logits[0, -1]))
+        req.out.append(tok)
+        self.stats.tokens += 1
+        if (self.eos_id is not None and tok == self.eos_id) or len(req.out) >= req.max_new:
+            req.done = True
+
+    def _write_prefill(self, slot: int, req: Request, pcache: Params) -> None:
+        """Copy a batch-1 prefill cache into slot `slot` of the pool cache."""
         s = len(req.prompt)
 
         def write(full, part):
@@ -112,11 +172,6 @@ class Engine:
             return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
 
         self.cache = jax.tree.map(write, self.cache, pcache)
-        self.pos[slot] = s
-        tok = self._sample(np.asarray(logits[0, -1]))
-        req.out.append(tok)
-        if (self.eos_id is not None and tok == self.eos_id) or len(req.out) >= req.max_new:
-            req.done = True
 
     def _reset_slot(self, slot: int) -> None:
         """Restore a freed slot's cache rows to their init values so stale KV /
@@ -147,6 +202,13 @@ class Engine:
 
     # -- decode tick -------------------------------------------------------------
 
+    def _decode_tick(self, tokens: np.ndarray) -> jax.Array:
+        """Run one jitted decode step over the whole pool; returns logits."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.pos)
+        )
+        return logits
+
     def step(self) -> None:
         self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
@@ -155,14 +217,15 @@ class Engine:
         tokens = np.zeros((self.slots, 1), np.int32)
         for i in live:
             tokens[i, 0] = self.active[i].out[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.pos)
-        )
+        logits = self._decode_tick(tokens)
+        self.stats.ticks += 1
+        self.stats.occupancy_sum += len(live)
         logits_np = np.asarray(logits[:, 0, :])
         for i in live:  # empty slots' outputs are never decoded
             req = self.active[i]
             tok = self._sample(logits_np[i])
             req.out.append(tok)
+            self.stats.tokens += 1
             self.pos[i] += 1
             hit_eos = self.eos_id is not None and tok == self.eos_id
             if hit_eos or len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:

@@ -1,0 +1,381 @@
+"""Paged KV-cache subsystem: block-table allocator + paged serving engine.
+
+The dense :class:`~repro.serve.engine.Engine` preallocates a ``(slots,
+max_len)`` KV cache per layer, so memory scales with the worst case and every
+decode tick attends over ``max_len`` positions under a validity mask. This
+module replaces that with the vLLM design:
+
+* a **global pool** of fixed-size KV pages (``block_size`` tokens each,
+  per layer) shared by every slot — physical page 0 is reserved as a null
+  page so empty table entries always index valid memory;
+* a **host-side allocator** (:class:`PagedKVPool`) mapping each slot to a
+  ``(max_blocks,)`` block table, with a free list and per-page refcounts;
+* **hash-based prefix reuse**: each *full* prompt block is keyed by a chain
+  of its own and all ancestor blocks' token bytes (hashed for dict lookup,
+  confirmed by equality — different prefixes can never alias); prompts
+  sharing a leading prefix (system prompts) map those blocks to the same
+  physical pages (refcount > 1). Sharing is free-on-done: a page's cache
+  entry lives exactly as long as some live request holds the page;
+* **copy-on-write**: a write into a shared page (reachable via
+  :meth:`PagedKVPool.fork`, i.e. parallel sampling from a common prefix)
+  copies it to a private page at the first divergent token;
+* the decode path gathers only a slot's live pages — via the Pallas
+  paged-attention kernel on TPU, or the pure-JAX gather reference elsewhere
+  (see ``repro/kernels/paged_attention.py`` / ``kernels/ref.py``).
+
+Prefill still runs through the dense full-sequence path (flash attention);
+its per-position KV is scattered into pages at admission, skipping positions
+already resident in shared prefix pages. Recurrent states (Mamba/xLSTM) and
+cross-attention KV are not paged — they stay dense per-slot rows.
+
+Stale data can never leak: a recycled page is only reachable through a block
+table after its new owner's prefill/decode has overwritten the positions it
+attends to, and positions beyond a row's live length are masked (same
+argument as the dense engine's validity mask), with refcounts guaranteeing a
+live request's pages are never recycled under it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serve.engine import Engine, Params, Request
+
+NULL_PAGE = 0
+_CHAIN_ROOT = ("kv-prefix",)
+
+
+def _map_cache(node, other, on_pages, on_dense):
+    """Walk a paged cache tree (optionally in lockstep with a parallel tree —
+    a prefill cache, a reset template, or None), dispatching paged leaf-dicts
+    (``{"k_pages","v_pages"}``) and dense leaves to separate handlers."""
+    if isinstance(node, dict):
+        if "k_pages" in node:
+            return on_pages(node, other)
+        return {
+            k: _map_cache(v, None if other is None else other[k], on_pages, on_dense)
+            for k, v in node.items()
+        }
+    return on_dense(node, other)
+
+
+class PagedKVPool:
+    """Host-side page allocator: free list, refcounts, block tables, and the
+    chained-hash prefix cache. Purely bookkeeping — device copies required by
+    copy-on-write are returned to the caller to apply."""
+
+    def __init__(self, num_blocks: int, block_size: int, slots: int, max_blocks: int):
+        assert num_blocks >= 2, "need at least the null page plus one real page"
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_blocks = max_blocks
+        # pop() hands out the lowest free id first (deterministic tests)
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self.refcount = np.zeros(num_blocks, np.int32)
+        self.refcount[NULL_PAGE] = 1  # permanently held
+        self.block_tables = np.zeros((slots, max_blocks), np.int32)
+        self.n_blocks = np.zeros(slots, np.int32)
+        # Prefix-cache keys are chained tuples carrying the actual token
+        # bytes of every block up the chain — dict lookup hashes them for
+        # bucketing but confirms with equality, so two different prefixes can
+        # never alias the same physical page (no hash-collision exposure).
+        self._key_to_block: dict[tuple, int] = {}
+        self._block_key: dict[int, tuple] = {}
+        self.prefix_hits = 0
+        self.cow_copies = 0
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_blocks - 1 - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def _take(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                "KV page pool exhausted — size the pool for the admitted "
+                "working set (preemption is not implemented)"
+            )
+        blk = self._free.pop()
+        self.refcount[blk] = 1
+        return blk
+
+    def _decref(self, blk: int) -> None:
+        self.refcount[blk] -= 1
+        assert self.refcount[blk] >= 0
+        if self.refcount[blk] == 0:
+            self._unregister(blk)
+            self._free.append(blk)
+
+    def _unregister(self, blk: int) -> None:
+        key = self._block_key.pop(blk, None)
+        if key is not None:
+            self._key_to_block.pop(key, None)
+
+    # -- prompt admission ------------------------------------------------------
+
+    def alloc_prompt(self, slot: int, tokens: np.ndarray) -> int:
+        """Assign pages to ``slot`` for a prompt. Leading full blocks whose
+        chained content hash matches a live page are shared instead of
+        allocated. Returns the number of leading positions whose KV already
+        resides in shared pages (a multiple of ``block_size``) — the caller
+        skips writing those. Full blocks are immutable once written, so only
+        they are registered in the prefix cache; the partial tail block is
+        always private."""
+        bs = self.block_size
+        s = len(tokens)
+        assert self.n_blocks[slot] == 0, "slot must be freed before realloc"
+        assert -(-s // bs) <= self.max_blocks
+        toks = np.asarray(tokens)
+        # chained content key: block i's key embeds the bytes of blocks 0..i
+        key = _CHAIN_ROOT
+        reused = 0
+        matching = True
+        for i in range(s // bs):
+            key = (key, toks[i * bs : (i + 1) * bs].tobytes())
+            if matching:
+                blk = self._key_to_block.get(key)
+                if blk is not None:
+                    self.refcount[blk] += 1
+                    self.block_tables[slot, i] = blk
+                    self.n_blocks[slot] += 1
+                    self.prefix_hits += 1
+                    reused += bs
+                    continue
+                matching = False
+            blk = self._take()
+            if key not in self._key_to_block:
+                self._key_to_block[key] = blk
+                self._block_key[blk] = key
+            self.block_tables[slot, i] = blk
+            self.n_blocks[slot] += 1
+        if s % bs:
+            self.block_tables[slot, s // bs] = self._take()
+            self.n_blocks[slot] += 1
+        return reused
+
+    # -- decode-time growth / copy-on-write ------------------------------------
+
+    def ensure_writable(self, slot: int, pos: int) -> list[tuple[int, int]]:
+        """Make position ``pos`` writable for ``slot``: allocate the
+        containing block when the slot crosses into it; copy-on-write when the
+        block is shared. Returns ``[(src_page, dst_page)]`` device copies the
+        caller must apply before writing."""
+        bi = pos // self.block_size
+        assert bi < self.max_blocks, "position beyond the slot's block table"
+        if bi >= self.n_blocks[slot]:
+            assert bi == self.n_blocks[slot], "blocks are appended in order"
+            self.block_tables[slot, bi] = self._take()
+            self.n_blocks[slot] += 1
+            return []
+        blk = int(self.block_tables[slot, bi])
+        if self.refcount[blk] > 1:  # shared frontier (fork): diverge now
+            new = self._take()
+            self.refcount[blk] -= 1  # still held by the other sharer(s)
+            self.block_tables[slot, bi] = new
+            self.cow_copies += 1
+            return [(blk, new)]
+        # Exclusively held. A registered (full, prefix-cached) page is about
+        # to be mutated — drop its hash entry so no future prompt matches
+        # content that no longer exists. (Unreachable through append-only
+        # decode, which only ever writes past the registered full blocks, but
+        # cheap insurance against future write patterns.)
+        self._unregister(blk)
+        return []
+
+    # -- sharing ---------------------------------------------------------------
+
+    def fork(self, src_slot: int, dst_slot: int) -> None:
+        """Share *all* of ``src_slot``'s pages with ``dst_slot`` (parallel
+        sampling: two continuations of one prefix). The shared frontier page
+        is diverged lazily by copy-on-write at the first write."""
+        assert self.n_blocks[dst_slot] == 0, "destination slot must be free"
+        n = int(self.n_blocks[src_slot])
+        for i in range(n):
+            blk = int(self.block_tables[src_slot, i])
+            self.refcount[blk] += 1
+            self.block_tables[dst_slot, i] = blk
+        self.n_blocks[dst_slot] = n
+
+    def free(self, slot: int) -> None:
+        """Release a slot's pages (eviction = free-on-done: pages and their
+        prefix-cache entries survive only while other live requests share
+        them)."""
+        for i in range(int(self.n_blocks[slot])):
+            self._decref(int(self.block_tables[slot, i]))
+        self.block_tables[slot, :] = NULL_PAGE
+        self.n_blocks[slot] = 0
+
+
+class PagedEngine(Engine):
+    """Continuous-batching engine over the paged KV pool. Token-identical to
+    the dense :class:`Engine` under greedy decoding; KV memory scales with
+    live tokens (``page_high_water * block_size``) instead of
+    ``slots * max_len``."""
+
+    def __init__(
+        self,
+        model: Model,
+        params: Params,
+        *,
+        slots: int,
+        max_len: int,
+        block_size: int = 16,
+        num_blocks: int | None = None,
+        **kw,
+    ):
+        self.block_size = block_size
+        self.max_blocks = -(-max_len // block_size)
+        # default: capacity-equivalent to the dense cache (every slot may
+        # hold max_blocks private pages) plus the null page
+        self.num_blocks = num_blocks or slots * self.max_blocks + 1
+        self.pool = PagedKVPool(self.num_blocks, block_size, slots, self.max_blocks)
+        # worst-case page reservation per slot: admission only proceeds when
+        # the pool can cover every admitted request growing to its full
+        # budget, so decode can never hit pool exhaustion mid-flight (there
+        # is no preemption). Prefix sharing only frees pages beyond this.
+        self._reserved = np.zeros(slots, np.int64)
+        super().__init__(model, params, slots=slots, max_len=max_len, **kw)
+
+    def _make_cache(self) -> Params:
+        return self.model.init_cache(
+            self.slots,
+            self.max_len,
+            src_len=self.model.cfg.n_vision_tokens,
+            kv_pages=(self.num_blocks, self.block_size),
+        )
+
+    def _make_fresh(self) -> Params:
+        # the reset template's self-attn KV leaves are never read (pages are
+        # reclaimed through the pool) — length 1 instead of a pinned
+        # slot-sized dense row
+        return self.model.init_cache(1, 1, src_len=self.model.cfg.n_vision_tokens)
+
+    # -- admission -------------------------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        # worst case, no prefix hits: prefill writes len(prompt) positions
+        # and decode at most max_new - 1 more, capped at max_len by the
+        # engine's capacity cut-off
+        tokens = min(len(req.prompt) + max(req.max_new - 1, 0), self.max_len)
+        return max(-(-tokens // self.block_size), 1)
+
+    def submit(self, req: Request) -> None:
+        need = self._pages_needed(req)
+        if need > self.num_blocks - 1:
+            raise ValueError(
+                f"request needs up to {need} pages but the pool only has "
+                f"{self.num_blocks - 1} (block_size={self.block_size})"
+            )
+        super().submit(req)
+
+    def _can_admit(self, req: Request) -> bool:
+        return (self.num_blocks - 1) - int(self._reserved.sum()) >= self._pages_needed(req)
+
+    def _write_prefill(self, slot: int, req: Request, pcache: Params) -> None:
+        self._reserved[slot] = self._pages_needed(req)
+        s = len(req.prompt)
+        reused = self.pool.alloc_prompt(slot, req.prompt)
+        positions = np.arange(reused, s)
+        blocks = self.pool.block_tables[slot, positions // self.block_size]
+        flat = jnp.asarray(blocks * self.block_size + positions % self.block_size)
+
+        def write_pages(pages, part):
+            # pages: (P, NB, bs, K, hd); part: (P, 1, S, K, hd) dense prefill
+            p, nb, bs = pages.shape[:3]
+            flatp = pages.reshape(p, nb * bs, *pages.shape[3:])
+            new = part[:, 0, reused:s].astype(pages.dtype)
+            return flatp.at[:, flat].set(new).reshape(pages.shape)
+
+        def on_pages(node, part):
+            return {
+                "k_pages": write_pages(node["k_pages"], part["k"]),
+                "v_pages": write_pages(node["v_pages"], part["v"]),
+            }
+
+        def on_dense(full, part):  # recurrent states / cross-attn KV
+            if part is None:
+                return full
+            idx = (0, slot) + (0,) * (part.ndim - 2)
+            return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
+
+        self.cache = _map_cache(self.cache, pcache, on_pages, on_dense)
+        self._sync_pool_stats()
+
+    def _reset_slot(self, slot: int) -> None:
+        """Free the slot's pages and reset its dense (non-paged) cache rows."""
+        self.pool.free(slot)
+        self._reserved[slot] = 0
+
+        def on_dense(full, fresh):
+            idx = (0, slot) + (0,) * (fresh.ndim - 2)
+            return jax.lax.dynamic_update_slice(full, fresh.astype(full.dtype), idx)
+
+        # paged leaves pass through untouched: pages return via the free list
+        self.cache = _map_cache(
+            self.cache, self._fresh, lambda node, _: node, on_dense
+        )
+        self.pos[slot] = 0
+        self._sync_pool_stats()
+
+    # -- decode tick -------------------------------------------------------------
+
+    def _decode_tick(self, tokens: np.ndarray) -> jax.Array:
+        copies: list[tuple[int, int]] = []
+        for i, r in enumerate(self.active):
+            if r is not None:
+                copies += self.pool.ensure_writable(i, int(self.pos[i]))
+        if copies:
+            self._apply_copies(copies)
+        logits, self.cache = self._decode(
+            self.params,
+            self.cache,
+            jnp.asarray(tokens),
+            jnp.asarray(self.pos),
+            jnp.asarray(self.pool.block_tables),
+        )
+        self._sync_pool_stats()
+        return logits
+
+    def _apply_copies(self, copies: list[tuple[int, int]]) -> None:
+        """Apply copy-on-write page copies device-side (all layers at once)."""
+        src = jnp.asarray([c[0] for c in copies])
+        dst = jnp.asarray([c[1] for c in copies])
+        self.cache = _map_cache(
+            self.cache,
+            None,
+            lambda node, _: {k: v.at[:, dst].set(v[:, src]) for k, v in node.items()},
+            lambda leaf, _: leaf,
+        )
+
+    def _sync_pool_stats(self) -> None:
+        self.stats.pages_in_use = self.pool.pages_in_use
+        self.stats.page_high_water = max(
+            self.stats.page_high_water, self.pool.pages_in_use
+        )
+        self.stats.prefix_hits = self.pool.prefix_hits
+
+    # -- accounting --------------------------------------------------------------
+
+    def kv_bytes_in_use(self) -> int:
+        """Physical KV bytes backing live pages (peak; all layers), the
+        number the benchmark compares against the dense footprint."""
+        per_page = 0
+
+        def count(node):
+            nonlocal per_page
+            if isinstance(node, dict):
+                if "k_pages" in node:
+                    for leaf in node.values():
+                        # (P, NB, bs, K, hd): bytes of one page across periods
+                        per_page += leaf.nbytes // leaf.shape[1]
+                else:
+                    for v in node.values():
+                        count(v)
+
+        count(self.cache)
+        return per_page * self.stats.page_high_water

@@ -1,0 +1,69 @@
+"""Bit-plane packing round-trip coverage: every supported bit width on
+non-default axes, and `packed_shape` error/shape contracts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("axis", [0, 1, -1])
+def test_roundtrip_2d(bits, axis):
+    rng = np.random.default_rng(bits * 10 + axis)
+    shape = (64, 96)
+    codes = jnp.asarray(rng.integers(0, 2**bits, size=shape), jnp.int32)
+    planes = packing.pack(codes, bits, axis=axis)
+    assert planes.shape == packing.packed_shape(shape, bits, axis=axis)
+    assert planes.dtype == jnp.uint32
+    got = packing.unpack(planes, bits, axis=axis)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("axis", [0, 1, 2])
+def test_roundtrip_3d_middle_axes(bits, axis):
+    rng = np.random.default_rng(bits)
+    shape = (4, 32, 8) if axis == 1 else ((32, 4, 8) if axis == 0 else (4, 8, 32))
+    codes = jnp.asarray(rng.integers(0, 2**bits, size=shape), jnp.int32)
+    planes = packing.pack(codes, bits, axis=axis)
+    assert planes.shape == packing.packed_shape(shape, bits, axis=axis)
+    got = packing.unpack(planes, bits, axis=axis)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+def test_roundtrip_preserves_extreme_codes():
+    """All-zeros and all-max codes survive for the widest width (8-bit)."""
+    for fill in (0, 255):
+        codes = jnp.full((32, 4), fill, jnp.int32)
+        got = packing.unpack(packing.pack(codes, 8), 8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+def test_packed_shape_values():
+    assert packing.packed_shape((64, 5), 3, axis=0) == (2, 3, 5)
+    assert packing.packed_shape((5, 64), 4, axis=1) == (5, 2, 4)
+    assert packing.packed_shape((5, 64), 2, axis=-1) == (5, 2, 2)
+
+
+@pytest.mark.parametrize("axis", [0, 1, -1])
+def test_packed_shape_rejects_indivisible_axis(axis):
+    shape = (48, 33)
+    if shape[axis % 2] % 32 == 0:
+        pytest.skip("axis divisible in this layout")
+    with pytest.raises(ValueError, match="not divisible by 32"):
+        packing.packed_shape(shape, 4, axis=axis)
+
+
+def test_pack_rejects_indivisible_axis():
+    codes = jnp.zeros((33, 8), jnp.int32)
+    with pytest.raises(ValueError, match="not divisible by 32"):
+        packing.pack(codes, 2, axis=0)
+
+
+def test_pack_unpack_match_under_jit():
+    codes = jnp.asarray(np.random.default_rng(0).integers(0, 8, (8, 64)), jnp.int32)
+    planes = jax.jit(lambda c: packing.pack(c, 3, axis=1))(codes)
+    got = jax.jit(lambda p: packing.unpack(p, 3, axis=1))(planes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))

@@ -1,0 +1,292 @@
+"""Paged KV-cache subsystem tests: allocator invariants (refcounts, prefix
+reuse, copy-on-write, free-on-done), token-identity of the paged engine vs
+the dense engine under staggered admission, physical prefix sharing, and the
+Pallas paged-attention kernel vs its pure-JAX oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.serve.paged_kv import NULL_PAGE, PagedEngine, PagedKVPool
+
+CFG = ModelConfig(
+    name="paged-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=97, loss_chunk=32, dtype=jnp.float32,
+)
+MAX_LEN = 64
+BS = 4  # small block size so prompts span several pages
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _sequential(model, params, prompt, max_new):
+    eng = Engine(model, params, slots=1, max_len=MAX_LEN)
+    req = Request(rid=0, prompt=prompt, max_new=max_new)
+    eng.submit(req)
+    eng.run()
+    assert req.done
+    return req.out
+
+
+# ---------------------------------------------------------------------------
+# Allocator unit tests (host-side bookkeeping only)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagedKVPool(num_blocks=8, block_size=4, slots=2, max_blocks=4)
+    assert pool.pages_in_use == 0
+    reused = pool.alloc_prompt(0, np.arange(10, dtype=np.int32))  # 2 full + 1 partial
+    assert reused == 0
+    assert pool.n_blocks[0] == 3 and pool.pages_in_use == 3
+    assert (pool.block_tables[0, :3] > NULL_PAGE).all()
+    pool.free(0)
+    assert pool.pages_in_use == 0 and pool.n_blocks[0] == 0
+    assert (pool.block_tables[0] == NULL_PAGE).all()
+
+
+def test_pool_prefix_reuse_and_free_on_done():
+    pool = PagedKVPool(num_blocks=16, block_size=4, slots=3, max_blocks=4)
+    prompt_a = np.arange(11, dtype=np.int32)  # blocks [0:4),[4:8) full
+    prompt_b = np.concatenate([np.arange(8), [90, 91]]).astype(np.int32)
+    pool.alloc_prompt(0, prompt_a)
+    reused = pool.alloc_prompt(1, prompt_b)
+    assert reused == 8 and pool.prefix_hits == 2
+    assert (pool.block_tables[0, :2] == pool.block_tables[1, :2]).all()
+    shared = pool.block_tables[0, :2]
+    assert (pool.refcount[shared] == 2).all()
+    # tails are private
+    assert pool.block_tables[0, 2] != pool.block_tables[1, 2]
+    # free A: shared pages survive (B still holds them), A's tail returns
+    in_use = pool.pages_in_use
+    pool.free(0)
+    assert (pool.refcount[shared] == 1).all()
+    assert pool.pages_in_use == in_use - 1
+    # free B: everything returns, and the hashes died with the pages —
+    # a re-admitted identical prompt allocates fresh (free-on-done eviction)
+    pool.free(1)
+    assert pool.pages_in_use == 0
+    assert pool.alloc_prompt(2, prompt_a) == 0
+    assert pool.prefix_hits == 2  # unchanged
+
+
+def test_pool_divergent_prompts_share_only_the_common_prefix():
+    pool = PagedKVPool(num_blocks=16, block_size=4, slots=2, max_blocks=4)
+    a = np.arange(16, dtype=np.int32)
+    b = np.concatenate([np.arange(8), np.arange(50, 58)]).astype(np.int32)
+    pool.alloc_prompt(0, a)
+    reused = pool.alloc_prompt(1, b)
+    assert reused == 8  # first divergent block breaks the chain hash
+    assert (pool.block_tables[0, :2] == pool.block_tables[1, :2]).all()
+    assert (pool.block_tables[0, 2:4] != pool.block_tables[1, 2:4]).all()
+
+
+def test_pool_copy_on_write_on_fork():
+    pool = PagedKVPool(num_blocks=10, block_size=4, slots=2, max_blocks=4)
+    pool.alloc_prompt(0, np.arange(6, dtype=np.int32))  # full + partial frontier
+    pool.fork(0, 1)
+    frontier = int(pool.block_tables[0, 1])
+    assert pool.refcount[frontier] == 2
+    copies = pool.ensure_writable(0, 6)  # first divergent write -> CoW
+    assert len(copies) == 1 and copies[0][0] == frontier
+    assert pool.cow_copies == 1
+    assert pool.block_tables[0, 1] != pool.block_tables[1, 1]
+    assert pool.refcount[frontier] == 1
+    # the remaining sharer is now exclusive: no second copy
+    assert pool.ensure_writable(1, 6) == []
+    # shared full block stays shared (never written)
+    assert pool.refcount[pool.block_tables[0, 0]] == 2
+
+
+def test_pool_exhaustion_raises():
+    pool = PagedKVPool(num_blocks=3, block_size=4, slots=1, max_blocks=4)
+    pool.alloc_prompt(0, np.arange(8, dtype=np.int32))
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.ensure_writable(0, 8)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_paged_staggered_admission_matches_sequential(model_params):
+    """The staggered-admission regression from test_ragged_decode, replayed
+    against the paged engine: paged must be token-identical to dense batch=1."""
+    model, params = model_params
+    rng = np.random.default_rng(0)
+    lens = (3, 7, 5, 11, 4, 9)
+    max_new = (6, 4, 8, 3, 7, 5)
+    prompts = [rng.integers(0, CFG.vocab, size=s).astype(np.int32) for s in lens]
+    reqs = [
+        Request(rid=i, prompt=p, max_new=m)
+        for i, (p, m) in enumerate(zip(prompts, max_new))
+    ]
+
+    eng = PagedEngine(model, params, slots=2, max_len=MAX_LEN, block_size=BS)
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    eng.step()
+    eng.step()
+    eng.submit(reqs[2])
+    eng.submit(reqs[3])
+    eng.step()
+    eng.submit(reqs[4])
+    eng.submit(reqs[5])
+    eng.run(max_ticks=200)
+
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.out == _sequential(model, params, r.prompt, r.max_new), r.rid
+    # drained engine returned every page to the pool
+    assert eng.pool.pages_in_use == 0
+    assert eng.stats.page_high_water > 0
+
+
+def test_paged_prefix_sharing_is_physical(model_params):
+    """Two live requests with a common system prompt share those KV pages
+    physically (pool refcount 2) and still decode exactly like batch=1."""
+    model, params = model_params
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, CFG.vocab, size=2 * BS).astype(np.int32)
+    pa = np.concatenate([system, rng.integers(0, CFG.vocab, size=3).astype(np.int32)])
+    pb = np.concatenate([system, rng.integers(0, CFG.vocab, size=5).astype(np.int32)])
+
+    eng = PagedEngine(model, params, slots=2, max_len=MAX_LEN, block_size=BS)
+    ra = Request(rid=0, prompt=pa, max_new=8)
+    rb = Request(rid=1, prompt=pb, max_new=8)
+    eng.submit(ra)
+    eng.submit(rb)
+    eng.step()  # both admitted, mid-flight
+    bt = eng.pool.block_tables
+    assert (bt[0, :2] == bt[1, :2]).all(), "prefix blocks not physically shared"
+    assert (eng.pool.refcount[bt[0, :2]] == 2).all()
+    assert eng.pool.prefix_hits == 2
+    assert eng.stats.prefix_hits == 2
+    eng.run(max_ticks=100)
+    assert ra.out == _sequential(model, params, pa, 8)
+    assert rb.out == _sequential(model, params, rb.prompt, 8)
+
+
+def test_paged_recycled_pages_do_not_leak(model_params):
+    """A short request admitted into pages recycled from a longer one must
+    see only its own KV (the paged analogue of the dense stale-KV test)."""
+    model, params = model_params
+    rng = np.random.default_rng(1)
+    long_prompt = rng.integers(0, CFG.vocab, size=24).astype(np.int32)
+    short_prompt = rng.integers(0, CFG.vocab, size=3).astype(np.int32)
+
+    eng = PagedEngine(model, params, slots=1, max_len=MAX_LEN, block_size=BS)
+    a = Request(rid=0, prompt=long_prompt, max_new=8)
+    b = Request(rid=1, prompt=short_prompt, max_new=8)
+    eng.submit(a)
+    eng.submit(b)
+    eng.run(max_ticks=100)
+    assert a.done and b.done
+    assert b.out == _sequential(model, params, short_prompt, 8)
+
+
+def test_paged_admission_waits_for_pool_headroom(model_params):
+    """With a pool too small for two live prompts, the second request queues
+    until the first finishes and frees its pages — then completes correctly."""
+    model, params = model_params
+    rng = np.random.default_rng(5)
+    pa = rng.integers(0, CFG.vocab, size=10).astype(np.int32)
+    pb = rng.integers(0, CFG.vocab, size=10).astype(np.int32)
+    # 10-token prompt -> 3 pages + headroom; pool of 5 pages fits one at a time
+    eng = PagedEngine(
+        model, params, slots=2, max_len=MAX_LEN, block_size=BS, num_blocks=6
+    )
+    a = Request(rid=0, prompt=pa, max_new=4)
+    b = Request(rid=1, prompt=pb, max_new=4)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()
+    assert any(r is a for r in eng.active) and all(r is not b for r in eng.active)
+    eng.run(max_ticks=200)
+    assert a.done and b.done
+    assert b.out == _sequential(model, params, pb, 4)
+
+
+def test_paged_reservation_prevents_mid_decode_exhaustion(model_params):
+    """Admission reserves every request's worst-case page growth, so two
+    slots crossing a block boundary in the same tick can never exhaust the
+    pool mid-decode (no preemption exists): with room for only one request's
+    full budget, the second queues instead of crashing the engine later."""
+    model, params = model_params
+    rng = np.random.default_rng(11)
+    # 6-token prompts, max_new=4 -> up to 9 positions = 3 pages each; a
+    # 5-page pool admits optimistically (2 pages now) but cannot cover both
+    # growing across the pos=8 boundary in the same tick
+    pa = rng.integers(0, CFG.vocab, size=6).astype(np.int32)
+    pb = rng.integers(0, CFG.vocab, size=6).astype(np.int32)
+    eng = PagedEngine(
+        model, params, slots=2, max_len=MAX_LEN, block_size=BS, num_blocks=6
+    )
+    a = Request(rid=0, prompt=pa, max_new=4)
+    b = Request(rid=1, prompt=pb, max_new=4)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()
+    assert all(r is not b for r in eng.active)  # b waits for reserved room
+    eng.run(max_ticks=200)  # must not raise "pool exhausted"
+    assert a.done and b.done
+    assert b.out == _sequential(model, params, pb, 4)
+
+
+def test_paged_engine_pallas_impl_matches_ref(model_params):
+    """End-to-end smoke of the Pallas kernel inside the engine (interpret
+    mode on CPU): same tokens as the pure-JAX reference path."""
+    model, params = model_params
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, CFG.vocab, size=6).astype(np.int32)
+    outs = []
+    for impl in ("ref", "pallas"):
+        m = Model(CFG.replace(paged_attn_impl=impl))
+        eng = PagedEngine(m, params, slots=1, max_len=32, block_size=BS)
+        req = Request(rid=0, prompt=prompt, max_new=4)
+        eng.submit(req)
+        eng.run(max_ticks=50)
+        assert req.done
+        outs.append(req.out)
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(3, 2, 2, 16, 8, 4), (2, 1, 4, 32, 16, 3)])
+def test_paged_attention_kernel_vs_ref(dtype, shape):
+    b, kh, g, hd, bs, mb = shape
+    rng = np.random.default_rng(b * 100 + hd)
+    nb = b * mb + 2
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, kh, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, kh, hd)), dtype)
+    # distinct live pages per row, ragged lengths, padding entries = null page
+    perm = rng.permutation(np.arange(1, nb))
+    bt = np.zeros((b, mb), np.int32)
+    lengths = np.zeros(b, np.int32)
+    for i in range(b):
+        n_live = int(rng.integers(1, mb + 1))
+        bt[i, :n_live] = perm[i * mb : i * mb + n_live]
+        lengths[i] = int(rng.integers((n_live - 1) * bs + 1, n_live * bs + 1))
+    bt, lengths = jnp.asarray(bt), jnp.asarray(lengths)
+    got = paged_attention(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )

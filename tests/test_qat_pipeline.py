@@ -4,7 +4,6 @@ validating the paper's core *ordering* claims (Table 5) on synthetic data:
     FP  <  Block-AP + E2E-QP  <=  Block-AP-only  <  RTN      (perplexity)
 """
 import jax
-import numpy as np
 import pytest
 
 from repro.core.block_ap import BlockAPConfig
@@ -71,7 +70,7 @@ def test_table5_component_ordering(setup):
 
 def test_e2e_qp_trains_only_step_sizes(setup):
     tokens, model_fp, fp_params, calib = setup
-    from repro.core.e2e_qp import make_step, trainable_pred
+    from repro.core.e2e_qp import trainable_pred
     from repro.optim import partition, path_mask
 
     cfg_q, q_params = quantize_rtn(CFG, fp_params, 2, 32)

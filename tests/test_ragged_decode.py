@@ -11,10 +11,12 @@ import inspect
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.common import ModelConfig
 from repro.models.model import Model
 from repro.serve.engine import Engine, Request
+from repro.serve.paged_kv import PagedEngine
 
 CFG = ModelConfig(
     name="ragged-test", family="dense", n_layers=2, d_model=64, n_heads=4,
@@ -116,6 +118,41 @@ def test_temperature_sampling_is_seeded_and_valid():
         outs.append(req.out)
     assert outs[0] == outs[1]  # same seed -> same sample path
     assert all(0 <= t < CFG.vocab for t in outs[0])
+
+
+@pytest.mark.parametrize("engine_cls", [Engine, PagedEngine], ids=["dense", "paged"])
+def test_capacity_fill_to_exactly_max_len(engine_cls):
+    """`submit` guarantees one free position and `step` ends a request at
+    ``pos >= max_len - 1``: a prompt of max_len-1 tokens fills the cache to
+    *exactly* max_len (prefill writes [0, max_len-1), the single decode tick
+    writes position max_len-1) with no out-of-bounds page/cache write."""
+    model, params = _model_params()
+    max_len = 16
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, CFG.vocab, size=max_len - 1).astype(np.int32)
+
+    eng = engine_cls(model, params, slots=1, max_len=max_len)
+    req = Request(rid=0, prompt=prompt, max_new=64)  # budget >> capacity
+    eng.submit(req)
+    eng.run(max_ticks=50)
+    assert req.done
+    # prefill sample + exactly one decode tick before capacity cut-off
+    assert len(req.out) == 2
+    if engine_cls is PagedEngine:
+        # every handed-out page id stayed inside the pool and the slot never
+        # outgrew its block table; the drained pool reclaimed everything
+        assert eng.pool.pages_in_use == 0
+        assert eng.stats.page_high_water <= eng.max_blocks
+        assert (eng.pool.block_tables < eng.num_blocks).all()
+    # a prompt at max_len itself is rejected up front
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=1, prompt=np.zeros(max_len, np.int32)))
+    # the capacity-limited tokens match an uncapped engine's first tokens
+    wide = engine_cls(model, params, slots=1, max_len=4 * max_len)
+    ref_req = Request(rid=2, prompt=prompt, max_new=2)
+    wide.submit(ref_req)
+    wide.run(max_ticks=50)
+    assert req.out == ref_req.out
 
 
 def test_engine_step_has_no_max_pos_hack():

@@ -1,7 +1,5 @@
 """Roofline machinery: HLO collective parsing, extrapolation math, and the
 analytic model-FLOPs accounting."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import roofline

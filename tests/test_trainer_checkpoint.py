@@ -118,8 +118,6 @@ def test_serve_engine_matches_manual_decode(quantized_model):
     eng = Engine(model, q_params, slots=2, max_len=64)
     eng.submit(Request(rid=0, prompt=prompt, max_new=5))
     eng.run()
-    got = eng.queue or None
-    out = None
     # the request object was consumed; re-run capturing it
     req = Request(rid=1, prompt=prompt, max_new=5)
     eng2 = Engine(model, q_params, slots=2, max_len=64)
