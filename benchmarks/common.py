@@ -1,8 +1,14 @@
 """Shared benchmark substrate: one cached FP teacher model + calibration /
 eval data, reused by every table benchmark (the paper's Llama-2-7B role is
-played by a 4-layer dense model trained on the synthetic Markov corpus)."""
+played by a 4-layer dense model trained on the synthetic Markov corpus).
+
+Every :func:`emit` row is also recorded in-memory; the harness
+(``benchmarks/run.py``) flushes the records of each table to a
+machine-readable ``BENCH_<table>.json`` next to the stdout CSV so the perf
+trajectory can be tracked across PRs."""
 from __future__ import annotations
 
+import json
 import pathlib
 import time
 
@@ -73,5 +79,22 @@ def timed(fn, *args, repeat: int = 1, **kwargs):
     return out, (time.time() - t0) / repeat * 1e6  # us
 
 
+RECORDS: list[dict] = []
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
 def emit(name: str, us: float, derived: str):
+    RECORDS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_json(table: str, directory: str | pathlib.Path = ".") -> pathlib.Path | None:
+    """Flush the current RECORDS to BENCH_<table>.json; None if empty."""
+    if not RECORDS:
+        return None
+    out = pathlib.Path(directory) / f"BENCH_{table}.json"
+    out.write_text(json.dumps({"table": table, "rows": RECORDS}, indent=2) + "\n")
+    return out

@@ -1,5 +1,7 @@
 """Benchmark harness: one function per paper table. Prints
-``name,us_per_call,derived`` CSV. Run: PYTHONPATH=src python -m benchmarks.run
+``name,us_per_call,derived`` CSV and flushes each table's rows to a
+machine-readable ``BENCH_<table>.json`` (perf trajectory across PRs).
+Run: PYTHONPATH=src python -m benchmarks.run
 (optionally: python -m benchmarks.run table5 table10)."""
 from __future__ import annotations
 
@@ -7,6 +9,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    common,
     table1_methods,
     table5_components,
     table6_trainable_params,
@@ -17,6 +20,7 @@ from benchmarks import (
     table12_group_size,
     table13_ragged_serving,
     table14_paged_serving,
+    table15_kv_quant,
     roofline_table,
 )
 
@@ -31,6 +35,7 @@ ALL = {
     "table12": table12_group_size.main,
     "table13": table13_ragged_serving.main,
     "table14": table14_paged_serving.main,
+    "table15": table15_kv_quant.main,
     "roofline": roofline_table.main,
 }
 
@@ -40,11 +45,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for name in picks:
+        common.reset_records()
         try:
             ALL[name]()
         except Exception:
             failures.append(name)
             traceback.print_exc()
+        finally:
+            # flush whatever was measured, even on a mid-table failure
+            common.write_json(name)
     if failures:
         print(f"FAILED: {failures}", file=sys.stderr)
         sys.exit(1)

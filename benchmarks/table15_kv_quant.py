@@ -1,0 +1,138 @@
+"""KV-cache quantization benchmark (new table: the bandwidth half of the
+serving story). After the paged engine, KV pages — not weights — dominate
+HBM traffic and pool capacity at realistic batch sizes. This table measures
+what ``kv_bits in (4, 8)`` buys over the fp KV baseline on the same
+mixed-length workload as table14:
+
+1. KV bytes/token (packed codes + scale/min planes vs the fp page) — the
+   decode-attention bandwidth proxy; must shrink >= 2x at 8-bit, >= 4x at 4.
+2. Correctness: kv_bits=8 greedy outputs are token-identical to fp KV on the
+   trained smoke model (LLM-QAT's observation, reproduced end to end).
+3. Peak pool bytes for the served workload, per bit-width.
+4. Max concurrent requests a fixed page-pool *byte* budget (the fp pool's
+   size) can admit under the engine's worst-case reservation — the capacity
+   multiplier low-bit KV gives a serving deployment.
+
+    PYTHONPATH=src python -m benchmarks.table15_kv_quant
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.models.model import Model
+from repro.serve.engine import Request
+from repro.serve.paged_kv import PagedEngine
+
+MAX_LEN = 160
+SLOTS = 4
+BLOCK = 16
+N_REQS = 12
+KV_GROUP = 32  # hd=32 on the teacher -> one quant group per head
+BITS = (16, 8, 4)
+
+
+def _requests(rng: np.random.Generator, vocab: int) -> list[Request]:
+    """Mixed lengths: 2 long-context, 4 sharing a system prompt, 6 short."""
+    system = rng.integers(0, vocab, size=2 * BLOCK).astype(np.int32)
+    reqs = []
+    for i in range(N_REQS):
+        if i < 2:
+            prompt = rng.integers(0, vocab, size=int(rng.integers(64, 100)))
+        elif i < 6:
+            tail = rng.integers(0, vocab, size=int(rng.integers(3, 12)))
+            prompt = np.concatenate([system, tail])
+        else:
+            prompt = rng.integers(0, vocab, size=int(rng.integers(4, 12)))
+        reqs.append(
+            Request(rid=i, prompt=prompt.astype(np.int32), max_new=int(rng.integers(4, 16)))
+        )
+    return reqs
+
+
+def _serve(engine: PagedEngine, reqs: list[Request]) -> float:
+    for i, r in enumerate(reqs):
+        engine.submit(r)
+        if i % 3 == 2:  # drip admission mid-decode
+            engine.step()
+    t0 = time.time()
+    engine.run(max_ticks=2000)
+    assert all(r.done for r in reqs)
+    return time.time() - t0
+
+
+def main():
+    import jax.numpy as jnp
+
+    teacher, params = common.get_teacher()
+    base_cfg = teacher.cfg.replace(dtype=jnp.float32)
+    vocab = base_cfg.vocab
+
+    engines: dict[int, PagedEngine] = {}
+    outs: dict[int, list[list[int]]] = {}
+    page_bytes: dict[int, int] = {}
+    for bits in BITS:
+        cfg = base_cfg if bits == 16 else base_cfg.replace(
+            kv_bits=bits, kv_group=KV_GROUP
+        )
+        eng = PagedEngine(
+            Model(cfg), params, slots=SLOTS, max_len=MAX_LEN, block_size=BLOCK
+        )
+        reqs = _requests(np.random.default_rng(0), vocab)
+        dt = _serve(eng, reqs)
+        engines[bits] = eng
+        outs[bits] = [r.out for r in reqs]
+        page_bytes[bits] = eng.kv_cache_bytes() // eng.num_blocks
+        toks = sum(len(r.out) for r in reqs)
+        common.emit(
+            f"table15/serve_kv{bits}", dt * 1e6,
+            f"tokens={toks};tok_s={toks / max(dt, 1e-9):.1f}",
+        )
+
+    # -- 1. KV bytes per token (codes + qparams), all layers -----------------
+    for bits in BITS:
+        bpt = page_bytes[bits] / BLOCK
+        ratio = page_bytes[16] / page_bytes[bits]
+        common.emit(
+            f"table15/kv_bytes_per_token_{bits}", 0.0,
+            f"bytes_per_token={bpt:.1f};vs_fp={ratio:.2f}x",
+        )
+    assert page_bytes[16] / page_bytes[8] >= 2.0, "8-bit KV must halve bytes/token"
+    assert page_bytes[16] / page_bytes[4] >= 4.0, "4-bit KV must quarter bytes/token"
+
+    # -- 2. greedy outputs at kv_bits=8 match the fp KV engine ---------------
+    mism8 = sum(a != b for a, b in zip(outs[16], outs[8]))
+    mism4 = sum(a != b for a, b in zip(outs[16], outs[4]))
+    assert mism8 == 0, f"{mism8}/{N_REQS} requests diverged at kv_bits=8"
+    common.emit(
+        "table15/kv_quant_correct", 0.0,
+        f"kv8_mismatches={mism8}/{N_REQS};kv4_mismatches={mism4}/{N_REQS}",
+    )
+
+    # -- 3. peak pool bytes for the served workload --------------------------
+    for bits in BITS:
+        eng = engines[bits]
+        peak = eng.stats.page_high_water * page_bytes[bits]
+        common.emit(
+            f"table15/pool_peak_{bits}", 0.0,
+            f"peak_bytes={peak};pages={eng.stats.page_high_water}",
+        )
+
+    # -- 4. concurrent-request capacity of the fp pool's byte budget ---------
+    budget = engines[16].kv_cache_bytes()
+    slots_at: dict[int, int] = {}
+    for bits in BITS:
+        pages_affordable = budget // page_bytes[bits] - 1  # minus null page
+        slots_at[bits] = int(pages_affordable // engines[bits].max_blocks)
+    common.emit(
+        "table15/max_slots_at_fp_budget", 0.0,
+        ";".join(f"kv{b}={slots_at[b]}" for b in BITS) + f";budget_bytes={budget}",
+    )
+    assert slots_at[8] >= 2 * slots_at[16], "8-bit KV must >=2x concurrent slots"
+    assert slots_at[4] >= 4 * slots_at[16], "4-bit KV must >=4x concurrent slots"
+
+
+if __name__ == "__main__":
+    main()

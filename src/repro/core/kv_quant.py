@@ -1,0 +1,108 @@
+"""Low-bit KV-cache codec: group-wise asymmetric quantization of K/V along
+the head dimension (LLM-QAT showed KV caches tolerate this well — decode is
+memory-bandwidth bound, so 4/8-bit KV cuts decode attention HBM traffic 2-4x
+and multiplies how many requests a fixed page pool can hold).
+
+Scheme (per token, per KV head, per ``group`` contiguous channels of hd):
+
+    s = (max - min) / (2^bits - 1)      # float32 step
+    code = round((x - min) / s)  in [0, 2^bits - 1]
+    x_hat = code * s + min
+
+Codes are stored as uint8. At 4 bits two channels share a byte in a
+**half-split** layout: byte ``i`` holds channel ``i`` in its low nibble and
+channel ``i + hd/2`` in its high nibble, so the in-kernel unpack is two
+shift/mask ops plus one concatenate — no lane interleave on the VPU.
+Scales and mins ride alongside the codes as float32 planes (one value per
+group), in pages for the paged engine and per-row chunks for the dense one.
+
+``kv_bits == 16`` means "disabled": the cache stays in the model dtype and
+every code path is byte-identical to the unquantized engines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "KV_BITS",
+    "kv_enabled",
+    "kv_group_for",
+    "packed_dim",
+    "kv_quantize",
+    "kv_unpack",
+    "kv_dequantize",
+]
+
+KV_BITS = (4, 8, 16)
+_EPS = 1e-8
+
+
+def kv_enabled(bits: int) -> bool:
+    if bits not in KV_BITS:
+        raise ValueError(f"kv_bits must be one of {KV_BITS}, got {bits}")
+    return bits != 16
+
+
+def kv_group_for(hd: int, kv_group: int) -> int:
+    """Effective quant-group size along the head dim: ``kv_group`` clamped to
+    ``hd`` (0 / negative = one group per head). Must divide ``hd``."""
+    g = kv_group if 0 < kv_group <= hd else hd
+    if hd % g:
+        raise ValueError(f"kv_group={g} must divide head_dim={hd}")
+    return g
+
+
+def packed_dim(hd: int, bits: int) -> int:
+    """Channels of uint8 storage per head: hd at 8-bit, hd/2 at 4-bit."""
+    if bits == 8:
+        return hd
+    if bits == 4:
+        if hd % 2:
+            raise ValueError(f"4-bit KV packing needs an even head_dim, got {hd}")
+        return hd // 2
+    raise ValueError(f"no packed layout for kv_bits={bits}")
+
+
+def kv_quantize(
+    x: jax.Array, bits: int, group: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x (..., hd) float -> (codes uint8 (..., packed_dim), scale f32
+    (..., hd/group), min f32 (..., hd/group))."""
+    hd = x.shape[-1]
+    ng = hd // group
+    qmax = float(2**bits - 1)
+    xg = x.astype(jnp.float32).reshape(*x.shape[:-1], ng, group)
+    mn = jnp.min(xg, axis=-1)
+    mx = jnp.max(xg, axis=-1)
+    s = jnp.maximum(mx - mn, _EPS) / qmax
+    codes = jnp.clip(jnp.round((xg - mn[..., None]) / s[..., None]), 0.0, qmax)
+    codes = codes.reshape(*x.shape[:-1], hd).astype(jnp.uint8)
+    if bits == 4:  # half-split: low nibble = channel i, high = channel i+hd/2
+        codes = codes[..., : hd // 2] | (codes[..., hd // 2 :] << 4)
+    return codes, s, mn
+
+
+def kv_unpack(codes: jax.Array, bits: int) -> jax.Array:
+    """uint8 codes (..., packed_dim) -> float32 integer codes (..., hd)."""
+    if bits == 8:
+        return codes.astype(jnp.float32)
+    lo = codes & jnp.uint8(0xF)
+    hi = codes >> jnp.uint8(4)
+    return jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+
+
+def kv_dequantize(
+    codes: jax.Array,
+    scale: jax.Array,
+    mn: jax.Array,
+    bits: int,
+    group: int,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Inverse of :func:`kv_quantize`: (..., packed_dim) -> (..., hd)."""
+    x = kv_unpack(codes, bits)
+    hd = x.shape[-1]
+    xg = x.reshape(*x.shape[:-1], hd // group, group)
+    out = xg * scale[..., None] + mn[..., None]
+    return out.reshape(*x.shape[:-1], hd).astype(dtype)

@@ -1,3 +1,19 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def interpret_default() -> bool:
+    """Default Pallas execution mode: compiled on TPU, interpreter elsewhere.
+
+    ``REPRO_PALLAS_INTERPRET=1`` pins interpreter mode regardless of backend
+    (CI sets it so kernel bodies execute deterministically on CPU runners).
+    """
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0"):
+        return True
+    return jax.default_backend() != "tpu"

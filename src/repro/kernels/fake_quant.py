@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import interpret_default
+
 
 def _kernel(w_ref, s_ref, z_ref, o_ref, *, bits: int, group: int):
     w = w_ref[...].astype(jnp.float32)  # (bg*g, bn)
@@ -42,7 +44,7 @@ def fake_quant(
 
     ``interpret`` defaults to compiled on TPU and interpreter elsewhere."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = interpret_default()
     k, n = w.shape
     g = k if group == -1 else group
     ngroups = k // g

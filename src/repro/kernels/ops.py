@@ -19,11 +19,12 @@ import jax.numpy as jnp
 
 from repro.core.quant import QuantSpec
 from repro.kernels import fake_quant as _fq_kernel
+from repro.kernels import interpret_default
 from repro.kernels import quant_matmul as _qmm_kernel
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return interpret_default()
 
 
 @partial(jax.jit, static_argnums=(4,))

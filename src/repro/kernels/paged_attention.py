@@ -12,6 +12,15 @@ step's HBM->VMEM DMA to the right physical page — the kernel never touches
 pages the row doesn't own, so decode bytes scale with the actual sequence
 length instead of ``max_len``.
 
+Low-bit KV (``kv_bits in (4, 8)``): pages hold uint8 codes (4-bit packs two
+channels per byte, half-split — see :mod:`repro.core.kv_quant`) plus float32
+scale/min planes per ``kv_group`` channels. The packed pages and their
+qparams stream through BlockSpecs exactly like fp pages, and **dequant is
+fused into the kernel**: codes unpack (shift/mask) and rescale
+(``code * s + min``) in VMEM/VREGs right before the streaming-softmax dot,
+so the low-bit representation is what crosses HBM — decode attention
+bandwidth drops by ~dtype_bits/kv_bits.
+
 Grid: (B, K, max_blocks) with the block axis innermost; fp32 running
 (m, l, acc) streaming-softmax scratch in VMEM, blocks past ``lengths[b]``
 skipped via ``pl.when``. GQA is native: the grid walks KV heads and each
@@ -26,7 +35,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.kv_quant import kv_dequantize
+from repro.kernels import interpret_default
+
 NEG_INF = -1e30
+
+
+def _online_softmax_step(q, k, v, j, length, m_ref, l_ref, acc_ref, *, scale, bs):
+    """One streaming-softmax update: fold page ``j`` (k/v: (bs, hd) f32) into
+    the running (m, l, acc) scratch for all G query heads of this group."""
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
+    k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bs), 1)
+    s = jnp.where(k_pos < length, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+
+def _dequant_page(codes, s, mn, *, bits, group):
+    """Fused in-VMEM dequant of one page's one KV head: uint8 codes
+    (bs, packed_dim) + f32 qparams (bs, hd/group) -> f32 (bs, hd).
+
+    Reuses the codec itself (pure shift/mask/concat + FMA — all VPU ops, no
+    interleave thanks to the half-split nibble layout), so the packed-page
+    format lives in exactly one place; :func:`ref.kv_dequant_ref` is the
+    independently written oracle the kernel is tested against."""
+    return kv_dequantize(codes, s, mn, bits, group, jnp.float32)
 
 
 def _kernel(
@@ -60,19 +101,9 @@ def _kernel(
         q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
-        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], bs), 1)
-        s = jnp.where(k_pos < length, s, NEG_INF)
-
-        m_prev, l_prev = m_ref[...], l_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
-            p, v, preferred_element_type=jnp.float32
+        _online_softmax_step(
+            q, k, v, j, length, m_ref, l_ref, acc_ref, scale=scale, bs=bs
         )
-        m_ref[...] = m_new
 
     @pl.when(j == nb - 1)
     def _fini():
@@ -81,14 +112,74 @@ def _kernel(
         )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel_quant(
+    bt_ref,  # (B, max_blocks) int32 scalar-prefetch: block tables
+    len_ref,  # (B,) int32 scalar-prefetch: live KV length per row
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, bs, 1, pd) uint8 — one packed page, one KV head
+    v_ref,  # (1, bs, 1, pd) uint8
+    ks_ref,  # (1, bs, 1, ng) f32 scales
+    km_ref,  # (1, bs, 1, ng) f32 mins
+    vs_ref,  # (1, bs, 1, ng) f32
+    vm_ref,  # (1, bs, 1, ng) f32
+    o_ref,  # (1, 1, G, hd)
+    m_ref,  # (G,) f32
+    l_ref,  # (G,) f32
+    acc_ref,  # (G, hd) f32
+    *,
+    scale: float,
+    bs: int,
+    nb: int,
+    bits: int,
+    group: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * bs < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = _dequant_page(
+            k_ref[0, :, 0], ks_ref[0, :, 0], km_ref[0, :, 0], bits=bits, group=group
+        )
+        v = _dequant_page(
+            v_ref[0, :, 0], vs_ref[0, :, 0], vm_ref[0, :, 0], bits=bits, group=group
+        )
+        _online_softmax_step(
+            q, k, v, j, length, m_ref, l_ref, acc_ref, scale=scale, bs=bs
+        )
+
+    @pl.when(j == nb - 1)
+    def _fini():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kv_bits", "kv_group", "interpret")
+)
 def paged_attention(
     q: jax.Array,  # (B, K, G, hd) — one decode token per row
-    k_pages: jax.Array,  # (num_blocks, block_size, K, hd)
+    k_pages: jax.Array,  # (num_blocks, block_size, K, hd | packed_dim)
     v_pages: jax.Array,
     block_tables: jax.Array,  # (B, max_blocks) int32 physical page ids
     lengths: jax.Array,  # (B,) int32 live KV length (incl. current token)
     *,
+    k_scale: jax.Array | None = None,  # (num_blocks, bs, K, hd/group) f32
+    k_min: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    v_min: jax.Array | None = None,
+    kv_bits: int = 16,
+    kv_group: int = 0,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-token decode attention over a paged KV pool. Returns (B, K, G, hd).
@@ -96,9 +187,13 @@ def paged_attention(
     Rows may sit at arbitrary lengths; entries of ``block_tables`` past a
     row's live blocks must still be *valid* page ids (the pool reserves page
     0 as a null page for exactly this) — their loads are masked, never used.
+
+    With ``kv_bits in (4, 8)`` the pages hold uint8 codes and the four
+    qparam planes are required; dequant happens inside the kernel, after the
+    HBM->VMEM DMA, so only packed bytes stream from HBM.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = interpret_default()
     b, kh, g, hd = q.shape
     _, bs, _, _ = k_pages.shape
     nb = block_tables.shape[1]
@@ -110,14 +205,30 @@ def paged_attention(
     def kv_index(bb, h, j, bt, ln):
         return (bt[bb, j], 0, h, 0)
 
+    # fp and quantized paths share the grid/scratch/output scaffolding and
+    # differ only in the KV operand list (+ the kernel body that unpacks it)
+    kernel = functools.partial(_kernel, scale=scale, bs=bs, nb=nb)
+    kv_specs = [pl.BlockSpec((1, bs, 1, k_pages.shape[-1]), kv_index)] * 2
+    kv_args = [k_pages, v_pages]
+    if kv_bits != 16:
+        assert (
+            k_scale is not None
+            and k_min is not None
+            and v_scale is not None
+            and v_min is not None
+        ), "quantized pages need their scale/min planes"
+        ng = k_scale.shape[-1]
+        assert kv_group * ng == hd, (kv_group, ng, hd)
+        kernel = functools.partial(
+            _kernel_quant, scale=scale, bs=bs, nb=nb, bits=kv_bits, group=kv_group
+        )
+        kv_specs += [pl.BlockSpec((1, bs, 1, ng), kv_index)] * 4
+        kv_args += [k_scale, k_min, v_scale, v_min]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kh, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), q_index),
-            pl.BlockSpec((1, bs, 1, hd), kv_index),
-            pl.BlockSpec((1, bs, 1, hd), kv_index),
-        ],
+        in_specs=[pl.BlockSpec((1, 1, g, hd), q_index), *kv_specs],
         out_specs=pl.BlockSpec((1, 1, g, hd), q_index),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
@@ -126,8 +237,8 @@ def paged_attention(
         ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, scale=scale, bs=bs, nb=nb),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, *kv_args)

@@ -67,6 +67,50 @@ def paged_attention_ref(
     return jnp.einsum("bkgs,bskd->bkgd", w, v)
 
 
+def kv_dequant_ref(
+    codes: jax.Array,  # uint8 (..., packed_dim)
+    scale: jax.Array,  # f32 (..., hd/group)
+    mn: jax.Array,  # f32 (..., hd/group)
+    bits: int,
+    group: int,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the in-kernel KV dequant: unpack uint8 codes (4-bit is
+    half-split: low nibble = channel i, high = channel i + hd/2) and rescale
+    ``code * s + min`` per group. Returns (..., hd)."""
+    if bits == 4:
+        lo = codes & jnp.uint8(0xF)
+        hi = codes >> jnp.uint8(4)
+        x = jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+    else:
+        x = codes.astype(jnp.float32)
+    hd = x.shape[-1]
+    xg = x.reshape(*x.shape[:-1], hd // group, group)
+    out = xg * scale[..., None] + mn[..., None]
+    return out.reshape(*x.shape[:-1], hd).astype(dtype)
+
+
+def paged_attention_quant_ref(
+    q: jax.Array,  # (B, K, G, hd)
+    k_pages: jax.Array,  # uint8 (num_blocks, block_size, K, packed_dim)
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scale: jax.Array,  # (num_blocks, block_size, K, hd/group) f32
+    k_min: jax.Array,
+    v_scale: jax.Array,
+    v_min: jax.Array,
+    bits: int,
+    group: int,
+) -> jax.Array:
+    """Quantized paged decode attention oracle: dequantize every page in
+    full precision, then run the fp oracle. Defines the semantics the fused
+    kernel must reproduce."""
+    kd = kv_dequant_ref(k_pages, k_scale, k_min, bits, group, q.dtype)
+    vd = kv_dequant_ref(v_pages, v_scale, v_min, bits, group, q.dtype)
+    return paged_attention_ref(q, kd, vd, block_tables, lengths)
+
+
 def fake_quant_ref(w: jax.Array, s: jax.Array, z: jax.Array, bits: int) -> jax.Array:
     """Group-wise fake-quant: w (K, N), s/z (K//g, 1, N) -> (K, N), w.dtype."""
     g = w.shape[0] // s.shape[0]

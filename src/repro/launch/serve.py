@@ -31,9 +31,15 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV engine (block tables)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=(4, 8, 16),
+                    help="KV-cache storage bits (16 = model dtype, no quant)")
+    ap.add_argument("--kv-group", type=int, default=32,
+                    help="channels per KV quant group along head_dim (<=0: whole head)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
+    if args.kv_bits != 16:
+        cfg = cfg.replace(kv_bits=args.kv_bits, kv_group=args.kv_group)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     kw = dict(
@@ -62,6 +68,7 @@ def main():
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU interpret)")
     print(f"stats: {engine.stats.summary()}")
+    print(f"kv cache bytes: {engine.kv_cache_bytes():,} (kv_bits={cfg.kv_bits})")
 
 
 if __name__ == "__main__":

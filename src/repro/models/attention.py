@@ -10,7 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.kv_quant import kv_dequantize, kv_quantize
 from repro.distributed.sharding import lc
+from repro.kernels import interpret_default
 from repro.models.common import ModelConfig, apply_rope, linear, linear_init
 
 NEG_INF = -1e30
@@ -79,26 +81,45 @@ def _flash(q, k, v, cfg):
     vf = v.swapaxes(1, 2).reshape(b * kh, sq, hd)
     of = flash_attention(
         qf, kf, vf, n_q_heads=h, n_kv_heads=kh,
-        interpret=jax.default_backend() != "tpu",
+        interpret=interpret_default(),
     )
     return of.reshape(b, h, sq, hd).swapaxes(1, 2).reshape(b, sq, kh, g, hd)
 
 
-def _paged_attention(q, k_pages, v_pages, block_tables, lengths, cfg):
-    """Dispatch paged decode attention: Pallas kernel on TPU (or when forced
-    via ``cfg.paged_attn_impl='pallas'``, interpreted off-TPU), pure-JAX
-    gather reference otherwise (CPU tests)."""
+def _paged_attention(q, pages, block_tables, lengths, cfg):
+    """Dispatch paged decode attention over a page-pool cache node: Pallas
+    kernel on TPU (or when forced via ``cfg.paged_attn_impl='pallas'``,
+    interpreted off-TPU), pure-JAX gather reference otherwise (CPU tests).
+    ``pages`` is the cache leaf-dict — fp {'k_pages','v_pages'} or quantized
+    (+ scale/min planes); low-bit pages are dequantized *inside* the kernel
+    so only packed bytes stream from HBM."""
     impl = cfg.paged_attn_impl
+    quant = cfg.kv_quant
     if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
         from repro.kernels.paged_attention import paged_attention
 
+        qparams = {}
+        if quant:
+            qparams = dict(
+                k_scale=pages["k_scale"], k_min=pages["k_min"],
+                v_scale=pages["v_scale"], v_min=pages["v_min"],
+                kv_bits=cfg.kv_bits, kv_group=cfg.kv_qgroup,
+            )
         return paged_attention(
-            q, k_pages, v_pages, block_tables, lengths,
-            interpret=jax.default_backend() != "tpu",
+            q, pages["k_pages"], pages["v_pages"], block_tables, lengths,
+            interpret=interpret_default(), **qparams,
         )
-    from repro.kernels.ref import paged_attention_ref
+    from repro.kernels import ref
 
-    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths)
+    if quant:
+        return ref.paged_attention_quant_ref(
+            q, pages["k_pages"], pages["v_pages"], block_tables, lengths,
+            pages["k_scale"], pages["k_min"], pages["v_scale"], pages["v_min"],
+            cfg.kv_bits, cfg.kv_qgroup,
+        )
+    return ref.paged_attention_ref(
+        q, pages["k_pages"], pages["v_pages"], block_tables, lengths
+    )
 
 
 def attn_apply(
@@ -154,25 +175,38 @@ def attn_apply(
                 raise ValueError("paged KV cache supports single-token decode only")
             if block_tables is None:
                 raise ValueError("paged cache needs block_tables")
-            kp, vp = cache["k_pages"], cache["v_pages"]
-            nb, bs_pg = kp.shape[0], kp.shape[1]
+            nb, bs_pg = cache["k_pages"].shape[0], cache["k_pages"].shape[1]
             blk = jnp.take_along_axis(
                 block_tables, (pos_vec // bs_pg)[:, None], axis=1
             )[:, 0]
             flat = blk * bs_pg + pos_vec % bs_pg  # (B,) physical token slots
-            kp = (
-                kp.reshape(nb * bs_pg, kheads, hd)
-                .at[flat].set(k[:, 0].astype(kp.dtype))
-                .reshape(kp.shape)
-            )
-            vp = (
-                vp.reshape(nb * bs_pg, kheads, hd)
-                .at[flat].set(v[:, 0].astype(vp.dtype))
-                .reshape(vp.shape)
-            )
-            new_cache = {"k_pages": kp, "v_pages": vp}
+
+            def scatter(pages, new):
+                flatp = pages.reshape(nb * bs_pg, *pages.shape[2:])
+                return flatp.at[flat].set(new.astype(pages.dtype)).reshape(pages.shape)
+
+            if cfg.kv_quant:
+                # quantize-on-write: the new token's K/V enter the pool as
+                # packed codes + per-group qparams; attention dequantizes
+                # them inside the kernel (never materialized fp in HBM)
+                bits, grp = cfg.kv_bits, cfg.kv_qgroup
+                kc, ks, km = kv_quantize(k[:, 0], bits, grp)  # (B, K, ...)
+                vc, vs, vm = kv_quantize(v[:, 0], bits, grp)
+                new_cache = {
+                    "k_pages": scatter(cache["k_pages"], kc),
+                    "v_pages": scatter(cache["v_pages"], vc),
+                    "k_scale": scatter(cache["k_scale"], ks),
+                    "k_min": scatter(cache["k_min"], km),
+                    "v_scale": scatter(cache["v_scale"], vs),
+                    "v_min": scatter(cache["v_min"], vm),
+                }
+            else:
+                new_cache = {
+                    "k_pages": scatter(cache["k_pages"], k[:, 0]),
+                    "v_pages": scatter(cache["v_pages"], v[:, 0]),
+                }
             qp = q[:, 0].reshape(b, kheads, g, hd)
-            out = _paged_attention(qp, kp, vp, block_tables, pos_vec + 1, cfg)
+            out = _paged_attention(qp, new_cache, block_tables, pos_vec + 1, cfg)
             out = out.reshape(b, sq, h * hd)
             y = linear(p["wo"], out, cfg)
             return lc(y, "batch", "seq", "embed"), new_cache
@@ -182,17 +216,53 @@ def attn_apply(
             # over the whole cache under a per-row validity mask.
             def row_write(c_row, new_row, p):
                 return jax.lax.dynamic_update_slice(
-                    c_row, new_row.astype(c_row.dtype), (p, 0, 0)
+                    c_row, new_row.astype(c_row.dtype), (p,) + (0,) * (c_row.ndim - 1)
                 )
 
-            ck = jax.vmap(row_write)(cache["k"], k, pos_vec)
-            cv = jax.vmap(row_write)(cache["v"], v, pos_vec)
-            k, v = ck, cv
-            new_cache = {"k": ck, "v": cv}
+            write = jax.vmap(row_write)
+            if "k_q" in cache:
+                # Quantized dense rows: quantize-on-write the new token(s),
+                # then attend over the dequantized cache (the XLA analogue of
+                # the fused paged kernel — the reference semantics).
+                bits, grp = cfg.kv_bits, cfg.kv_qgroup
+                kc, ks, km = kv_quantize(k, bits, grp)  # (B, Sq, K, ...)
+                vc, vs, vm = kv_quantize(v, bits, grp)
+                new_cache = {
+                    "k_q": write(cache["k_q"], kc, pos_vec),
+                    "v_q": write(cache["v_q"], vc, pos_vec),
+                    "k_s": write(cache["k_s"], ks, pos_vec),
+                    "k_m": write(cache["k_m"], km, pos_vec),
+                    "v_s": write(cache["v_s"], vs, pos_vec),
+                    "v_m": write(cache["v_m"], vm, pos_vec),
+                }
+                k = kv_dequantize(
+                    new_cache["k_q"], new_cache["k_s"], new_cache["k_m"],
+                    bits, grp, cfg.dtype,
+                )
+                v = kv_dequantize(
+                    new_cache["v_q"], new_cache["v_s"], new_cache["v_m"],
+                    bits, grp, cfg.dtype,
+                )
+            else:
+                ck = write(cache["k"], k, pos_vec)
+                cv = write(cache["v"], v, pos_vec)
+                k, v = ck, cv
+                new_cache = {"k": ck, "v": cv}
             kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos_vec[:, None] + sq - 1)
             causal = False  # handled by kv_mask for single-step decode
         elif make_cache:
-            new_cache = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+            if cfg.kv_quant and not cross:
+                # Prefill writes the prompt KV quantized — the same codes the
+                # paged engine scatters into pages, so dense and paged caches
+                # hold bit-identical low-bit KV for the same tokens.
+                bits, grp = cfg.kv_bits, cfg.kv_qgroup
+                kc, ks, km = kv_quantize(k, bits, grp)
+                vc, vs, vm = kv_quantize(v, bits, grp)
+                new_cache = {
+                    "k_q": kc, "v_q": vc, "k_s": ks, "k_m": km, "v_s": vs, "v_m": vm,
+                }
+            else:
+                new_cache = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
         else:
             new_cache = None
 

@@ -73,6 +73,9 @@ class ModelConfig:
     mode: str = "fp"  # fp | fake_quant | quantized
     fq_variant: str = "szW"  # Table-6 trainable-parameter scheme (fake_quant)
     use_kernel: bool = False  # Pallas fused dequant-matmul in quantized mode
+    # --- KV-cache quantization (serving; 16 = store KV in `dtype`) ---
+    kv_bits: int = 16  # self-attn KV storage bits: 4 | 8 | 16
+    kv_group: int = 32  # channels per KV quant group along head_dim (<=0: hd)
     # --- runtime ---
     dtype: Any = jnp.bfloat16
     remat: bool = True
@@ -89,6 +92,20 @@ class ModelConfig:
     @property
     def hd(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kv_quant(self) -> bool:
+        """True when the self-attn KV cache is stored in low-bit codes."""
+        from repro.core.kv_quant import kv_enabled
+
+        return kv_enabled(self.kv_bits)
+
+    @property
+    def kv_qgroup(self) -> int:
+        """Effective KV quant-group size (kv_group clamped to head_dim)."""
+        from repro.core.kv_quant import kv_group_for
+
+        return kv_group_for(self.hd, self.kv_group)
 
     @property
     def is_causal_lm(self) -> bool:

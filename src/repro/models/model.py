@@ -17,6 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import kv_quant as kv_quant_mod
 from repro.distributed.sharding import lc
 from repro.models import attention, ffn as ffn_mod, ssm, xlstm
 from repro.models.common import (
@@ -421,19 +422,52 @@ class Model:
         indexed through block tables at decode — instead of dense per-slot
         (batch, cache_len, K, hd) rows. Recurrent states and cross-attention
         KV stay dense per-slot either way.
+
+        With ``cfg.kv_bits in (4, 8)`` the self-attn KV leaves shrink to the
+        packed code dtype (uint8, two channels per byte at 4-bit) plus
+        float32 scale/min planes (one value per ``cfg.kv_qgroup`` channels):
+        paged pools carry {'k_pages','v_pages','k_scale','k_min','v_scale',
+        'v_min'}, dense rows {'k_q','k_s','k_m','v_q','v_s','v_m'}.
+        Recurrent states and cross-attention KV are never quantized.
         """
         cfg = self.cfg
         k, hd = cfg.n_kv_heads, cfg.hd
+        kv_quant = cfg.kv_quant
+        if kv_quant:
+            pd = kv_quant_mod.packed_dim(hd, cfg.kv_bits)
+            ng = hd // cfg.kv_qgroup
 
         def slot_cache(desc):
             c: Params = {}
             mx = desc["mixer"]
             if mx == "attn":
                 if kv_pages is not None:
-                    shape = (*kv_pages, k, hd)
+                    if kv_quant:
+                        qshape, pshape = (*kv_pages, k, ng), (*kv_pages, k, pd)
+                        c["mixer"] = {
+                            "k_pages": jnp.zeros(pshape, jnp.uint8),
+                            "v_pages": jnp.zeros(pshape, jnp.uint8),
+                            "k_scale": jnp.zeros(qshape, jnp.float32),
+                            "k_min": jnp.zeros(qshape, jnp.float32),
+                            "v_scale": jnp.zeros(qshape, jnp.float32),
+                            "v_min": jnp.zeros(qshape, jnp.float32),
+                        }
+                    else:
+                        shape = (*kv_pages, k, hd)
+                        c["mixer"] = {
+                            "k_pages": jnp.zeros(shape, cfg.dtype),
+                            "v_pages": jnp.zeros(shape, cfg.dtype),
+                        }
+                elif kv_quant:
+                    qshape = (batch, cache_len, k, ng)
+                    pshape = (batch, cache_len, k, pd)
                     c["mixer"] = {
-                        "k_pages": jnp.zeros(shape, cfg.dtype),
-                        "v_pages": jnp.zeros(shape, cfg.dtype),
+                        "k_q": jnp.zeros(pshape, jnp.uint8),
+                        "v_q": jnp.zeros(pshape, jnp.uint8),
+                        "k_s": jnp.zeros(qshape, jnp.float32),
+                        "k_m": jnp.zeros(qshape, jnp.float32),
+                        "v_s": jnp.zeros(qshape, jnp.float32),
+                        "v_m": jnp.zeros(qshape, jnp.float32),
                     }
                 else:
                     shape = (batch, cache_len, k, hd)

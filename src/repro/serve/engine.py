@@ -173,6 +173,28 @@ class Engine:
 
         self.cache = jax.tree.map(write, self.cache, pcache)
 
+    def kv_cache_bytes(self) -> int:
+        """Attention KV-cache footprint in bytes (all periods, all slots),
+        including scale/min planes when ``cfg.kv_bits < 16`` — the baseline
+        the paged/quantized benchmarks compare against. Counts every
+        attention KV leaf: on vlm/encdec configs that includes the
+        cross-attention KV, which stays full-precision by design."""
+        total = 0
+
+        def go(node):
+            nonlocal total
+            if isinstance(node, dict):
+                if "k" in node and "v" in node and node["k"].ndim == 5:
+                    total += node["k"].nbytes + node["v"].nbytes
+                elif "k_q" in node or "k_pages" in node:
+                    total += sum(leaf.nbytes for leaf in node.values())
+                else:
+                    for v in node.values():
+                        go(v)
+
+        go(self.cache)
+        return total
+
     def _reset_slot(self, slot: int) -> None:
         """Restore a freed slot's cache rows to their init values so stale KV /
         recurrent state cannot influence a newly admitted request.

@@ -28,6 +28,14 @@ its per-position KV is scattered into pages at admission, skipping positions
 already resident in shared prefix pages. Recurrent states (Mamba/xLSTM) and
 cross-attention KV are not paged — they stay dense per-slot rows.
 
+With ``cfg.kv_bits in (4, 8)`` the pool stores **quantized pages**: uint8
+code pages plus float32 scale/min planes (see :mod:`repro.core.kv_quant`).
+Allocation, prefix-reuse hashing, copy-on-write, and refcounts are untouched
+— they operate on page *ids*, and since codes are a pure function of the
+token KV, two requests sharing a prompt prefix share byte-identical
+quantized pages. The decode kernel dequantizes inside VMEM, so pool capacity
+and decode HBM traffic both shrink by ~dtype_bits/kv_bits.
+
 Stale data can never leak: a recycled page is only reachable through a block
 table after its new owner's prefill/decode has overwritten the positions it
 attends to, and positions beyond a row's live length are masked (same
@@ -285,13 +293,26 @@ class PagedEngine(Engine):
         flat = jnp.asarray(blocks * self.block_size + positions % self.block_size)
 
         def write_pages(pages, part):
-            # pages: (P, NB, bs, K, hd); part: (P, 1, S, K, hd) dense prefill
+            # pages: (P, NB, bs, K, X); part: (P, 1, S, K, X) dense prefill
+            # (X = hd for fp KV; packed codes / qparam planes when quantized)
             p, nb, bs = pages.shape[:3]
             flatp = pages.reshape(p, nb * bs, *pages.shape[3:])
             new = part[:, 0, reused:s].astype(pages.dtype)
             return flatp.at[:, flat].set(new).reshape(pages.shape)
 
         def on_pages(node, part):
+            if "k_scale" in node:
+                # low-bit pool: prefill produced per-token codes + qparams
+                # (attention quantized on write); scatter each plane into its
+                # pages — prefix-reuse skips shared leading positions exactly
+                # as in the fp path, and shared pages stay byte-identical
+                # because the codes are a pure function of the token KV.
+                names = (
+                    ("k_pages", "k_q"), ("v_pages", "v_q"),
+                    ("k_scale", "k_s"), ("k_min", "k_m"),
+                    ("v_scale", "v_s"), ("v_min", "v_m"),
+                )
+                return {pool: write_pages(node[pool], part[row]) for pool, row in names}
             return {
                 "k_pages": write_pages(node["k_pages"], part["k"]),
                 "v_pages": write_pages(node["v_pages"], part["v"]),

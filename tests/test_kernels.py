@@ -81,3 +81,22 @@ def test_quant_matmul_padding_path():
     got = ops.quant_matmul(x, planes, s, zq, spec)
     want = ref.quant_matmul_ref(x, planes, s, zq, 4, 32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("m", [1, 3, 37])
+def test_quant_matmul_gemv_and_ragged_m_vs_xla_dequant(bits, m):
+    """Decode-shaped GEMV (M=1) and non-tile-multiple M must match the
+    dequantize-then-matmul XLA path exactly (same codes, fp32 accumulation)."""
+    from repro.core.quant import dequantize
+
+    k, n, group = 128, 64, 32
+    planes, s, zq = make_quantized(k, n, bits, group)
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    got = ops.quant_matmul(x, planes, s, zq, QuantSpec(bits=bits, group_size=group))
+    codes = packing.unpack(planes, bits, axis=0).reshape(k // group, group, n)
+    w_hat = dequantize(codes, s, zq, jnp.float32)
+    want = jnp.dot(x.astype(jnp.float32), w_hat)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
