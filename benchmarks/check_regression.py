@@ -1,0 +1,155 @@
+"""CI benchmark-regression gate: compare freshly emitted ``BENCH_<table>.json``
+files against the baselines committed at the repo root and fail on
+regressions of the *modeled* metrics (byte footprints, bandwidth ratios,
+capacity multipliers, correctness mismatch counts). Wall-clock numbers
+(``us_per_call``, ``tok_s``, raw token counts) are deliberately not gated —
+they are noisy on shared CI runners; the modeled metrics are deterministic
+functions of config + workload, so any drift is a real code change.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline-dir . --current-dir bench-out table14 table15 table16
+
+Failure conditions:
+- a gated metric regresses by more than ``--threshold`` (default 10%),
+- a metric with baseline 0 (e.g. ``mismatches``) becomes nonzero,
+- a baseline row or table is missing from the current run,
+- the current JSON is stamped ``"failed": true`` (partial harness run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+# Metric keys parsed out of each row's `derived` string, with the direction
+# that counts as a regression. Keys not listed here are informational only.
+LOWER_IS_BETTER = {
+    "bytes_per_tick",  # table16: dense-decode HBM traffic per tick
+    "bytes_per_token",  # table15/16: KV bytes per cached token
+    "peak_bytes",  # table15: peak pool bytes for the served workload
+    "paged_peak",  # table14: paged engine's peak KV bytes
+    "dense",  # table14: dense engine's KV footprint
+    "ratio",  # table14: paged/dense byte ratio
+    "pages",  # table15: peak live pages
+    "pages_peak",  # table14
+    "page_bytes",  # table14: bytes per physical page
+    "mismatches",  # correctness rows: must stay 0
+    "kv8_mismatches",
+    "kv4_mismatches",
+    "pallas_vs_ref_mismatches",
+}
+HIGHER_IS_BETTER = {
+    "vs_fp",  # bandwidth / footprint multiplier over the fp cache
+    "kv16",  # table15: concurrent slots at the fp pool's byte budget
+    "kv8",
+    "kv4",
+    "prefix_hits",  # table14: prompt blocks served from the prefix cache
+}
+
+_NUM = re.compile(r"^-?\d+(\.\d+)?")
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """`k1=v1;k2=v2` -> {k: float} for every numeric v (leading number is
+    taken, so `3.20x` -> 3.2 and `0/12` -> 0); non-numeric pairs dropped."""
+    out: dict[str, float] = {}
+    for pair in derived.split(";"):
+        if "=" not in pair:
+            continue
+        key, val = pair.split("=", 1)
+        m = _NUM.match(val.strip())
+        if m:
+            out[key.strip()] = float(m.group(0))
+    return out
+
+
+def load(path: pathlib.Path) -> dict:
+    return json.loads(path.read_text())
+
+
+def check_table(
+    table: str, base_dir: pathlib.Path, cur_dir: pathlib.Path, threshold: float
+) -> list[str]:
+    """Returns a list of human-readable failure strings (empty = pass)."""
+    base_path = base_dir / f"BENCH_{table}.json"
+    cur_path = cur_dir / f"BENCH_{table}.json"
+    if not base_path.exists():
+        return [f"{table}: no committed baseline at {base_path}"]
+    if not cur_path.exists():
+        return [f"{table}: current run produced no {cur_path.name}"]
+    base, cur = load(base_path), load(cur_path)
+    if base.get("failed"):
+        # a partial baseline would silently gate only a fraction of the
+        # intended metrics — refuse until a clean baseline is committed
+        return [f"{table}: committed baseline is marked failed (partial rows)"]
+    if cur.get("failed"):
+        return [f"{table}: current run is marked failed (partial rows)"]
+    failures: list[str] = []
+    cur_rows = {r["name"]: r for r in cur["rows"]}
+    gated = 0
+    for brow in base["rows"]:
+        name = brow["name"]
+        crow = cur_rows.get(name)
+        if crow is None:
+            failures.append(f"{table}: row '{name}' missing from current run")
+            continue
+        bvals = parse_derived(brow.get("derived", ""))
+        cvals = parse_derived(crow.get("derived", ""))
+        for key, bv in bvals.items():
+            if key in LOWER_IS_BETTER:
+                sign = 1.0
+            elif key in HIGHER_IS_BETTER:
+                sign = -1.0
+            else:
+                continue
+            if key not in cvals:
+                failures.append(f"{table}: {name}: metric '{key}' disappeared")
+                continue
+            cv = cvals[key]
+            gated += 1
+            if bv == 0.0:
+                # zero baselines (mismatch counters) gate on exact zero
+                if sign * cv > 0.0:
+                    failures.append(
+                        f"{table}: {name}: {key} regressed from 0 to {cv:g}"
+                    )
+                continue
+            rel = sign * (cv - bv) / abs(bv)
+            if rel > threshold:
+                failures.append(
+                    f"{table}: {name}: {key} regressed {rel * 100:.1f}% "
+                    f"(baseline {bv:g} -> current {cv:g}, "
+                    f"threshold {threshold * 100:.0f}%)"
+                )
+    print(f"{table}: {gated} gated metrics, {len(failures)} regressions")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("tables", nargs="+", help="table names, e.g. table15")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current-dir", default="bench-out",
+                    help="directory holding this run's BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max tolerated relative regression (0.10 = 10%%)")
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baseline_dir)
+    cur_dir = pathlib.Path(args.current_dir)
+    failures: list[str] = []
+    for table in args.tables:
+        failures += check_table(table, base_dir, cur_dir, args.threshold)
+    if failures:
+        print("\nBENCHMARK REGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("benchmark regression gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -91,10 +91,19 @@ def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def write_json(table: str, directory: str | pathlib.Path = ".") -> pathlib.Path | None:
-    """Flush the current RECORDS to BENCH_<table>.json; None if empty."""
-    if not RECORDS:
+def write_json(
+    table: str, directory: str | pathlib.Path = ".", *, failed: bool = False
+) -> pathlib.Path | None:
+    """Flush the current RECORDS to BENCH_<table>.json; None if nothing to
+    write. A table that raised mid-run still flushes whatever it measured,
+    but the JSON carries ``"failed": true`` so downstream consumers (the CI
+    regression gate) can never mistake a partial run for a healthy one."""
+    if not RECORDS and not failed:
         return None
     out = pathlib.Path(directory) / f"BENCH_{table}.json"
-    out.write_text(json.dumps({"table": table, "rows": RECORDS}, indent=2) + "\n")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    doc: dict = {"table": table, "rows": RECORDS}
+    if failed:
+        doc["failed"] = True
+    out.write_text(json.dumps(doc, indent=2) + "\n")
     return out

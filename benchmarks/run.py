@@ -1,8 +1,16 @@
 """Benchmark harness: one function per paper table. Prints
 ``name,us_per_call,derived`` CSV and flushes each table's rows to a
 machine-readable ``BENCH_<table>.json`` (perf trajectory across PRs).
+
 Run: PYTHONPATH=src python -m benchmarks.run
-(optionally: python -m benchmarks.run table5 table10)."""
+(optionally: python -m benchmarks.run table5 table10
+ and/or --out=DIR to write the BENCH_*.json files somewhere other than cwd).
+
+Exit status is nonzero when *any* selected table raises — including an
+unknown table name — and a failing table's JSON is stamped ``"failed":
+true``, so a CI gate consuming the JSONs can trust that a green harness run
+means every row was measured to completion (partial JSON from a mid-table
+crash can never masquerade as a healthy baseline)."""
 from __future__ import annotations
 
 import sys
@@ -21,6 +29,7 @@ from benchmarks import (
     table13_ragged_serving,
     table14_paged_serving,
     table15_kv_quant,
+    table16_dense_decode,
     roofline_table,
 )
 
@@ -36,24 +45,40 @@ ALL = {
     "table13": table13_ragged_serving.main,
     "table14": table14_paged_serving.main,
     "table15": table15_kv_quant.main,
+    "table16": table16_dense_decode.main,
     "roofline": roofline_table.main,
 }
 
 
 def main() -> None:
-    picks = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    out_dir = "."
+    picks = []
+    for a in args:
+        if a.startswith("--out="):
+            out_dir = a.split("=", 1)[1]
+        else:
+            picks.append(a)
+    picks = picks or list(ALL)
+    unknown = [p for p in picks if p not in ALL]
+    if unknown:
+        print(f"unknown tables: {unknown} (known: {sorted(ALL)})", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = []
     for name in picks:
         common.reset_records()
+        ok = False
         try:
             ALL[name]()
+            ok = True
         except Exception:
             failures.append(name)
             traceback.print_exc()
         finally:
-            # flush whatever was measured, even on a mid-table failure
-            common.write_json(name)
+            # flush whatever was measured, even on a mid-table failure —
+            # marked failed so the regression gate refuses to baseline it
+            common.write_json(name, out_dir, failed=not ok)
     if failures:
         print(f"FAILED: {failures}", file=sys.stderr)
         sys.exit(1)

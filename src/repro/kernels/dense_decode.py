@@ -1,0 +1,224 @@
+"""Fused masked dense-decode attention Pallas TPU kernel: one query token
+per batch row attends over that row's *own* dense cache row ``(max_len, K,
+hd)`` under a per-slot position mask — the dense-engine analogue of the
+paged decode kernel (same streaming softmax, block tables replaced by a
+direct chunk walk over the row).
+
+Layout: the dense KV cache is per-slot rows ``k/v: (B, max_len, K, hd)``
+(what :meth:`Model.init_cache` allocates without ``kv_pages``) and
+``lengths: (B,)`` is each row's live KV length *including* the token written
+this tick. ``lengths`` rides in as scalar prefetch so masking needs no extra
+VMEM traffic; the cache row streams through BlockSpecs in ``chunk``-token
+slices and chunks past ``lengths[b]`` are skipped via ``pl.when`` — decode
+reads scale with the live sequence length, not ``max_len``.
+
+Low-bit KV (``kv_bits in (4, 8)``): rows hold uint8 codes (4-bit packs two
+channels per byte, half-split — see :mod:`repro.core.kv_quant`) plus float32
+scale/min planes per ``kv_group`` channels. Dequant is **fused into the
+kernel** — codes unpack (shift/mask) and rescale (``code * s + min``) in
+VMEM right before the streaming-softmax dot — so only packed bytes and
+qparam planes cross HBM and dense-decode attention bandwidth drops by
+~dtype_bits/kv_bits, exactly like the quantized paged kernel. Before this
+kernel the dense engine dequantized the entire ``(B, max_len)`` cache in
+XLA every tick, so the kv_bits bandwidth win was real only on the paged
+path.
+
+Grid: (B, K, n_chunks) with the chunk axis innermost; fp32 running
+(m, l, acc) streaming-softmax scratch in VMEM. GQA is native: each step
+computes all G query heads of one KV head's group against one chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import interpret_default
+from repro.kernels.paged_attention import (
+    _dequant_page,
+    _online_softmax_step,
+    _scratch_finalize,
+    _scratch_init,
+)
+
+MAX_CHUNK = 128
+MIN_CHUNK = 8
+
+
+def chunk_for(max_len: int) -> int:
+    """KV-chunk size streamed per grid step: the largest divisor of
+    ``max_len`` not exceeding ``MAX_CHUNK`` (BlockSpecs need an even split).
+
+    Awkward lengths (prime / near-prime ``max_len > MAX_CHUNK``) have no
+    usable divisor and would otherwise degrade to 1-token DMAs; those fall
+    back to streaming the whole row as a single chunk — more VMEM per step
+    (``max_len * hd`` floats) but one contiguous DMA instead of hundreds."""
+    for c in range(min(MAX_CHUNK, max_len), 0, -1):
+        if max_len % c == 0:
+            return max_len if c < min(MIN_CHUNK, max_len) else c
+    return 1
+
+
+def _kernel(
+    len_ref,  # (B,) int32 scalar-prefetch: live KV length per row
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, chunk, 1, hd) — one cache-row chunk, one KV head
+    v_ref,  # (1, chunk, 1, hd)
+    o_ref,  # (1, 1, G, hd)
+    m_ref,  # (G,) f32 running max
+    l_ref,  # (G,) f32 running sum
+    acc_ref,  # (G, hd) f32 accumulator
+    *,
+    scale: float,
+    bs: int,
+    nb: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _scratch_init(m_ref, l_ref, acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * bs < length)  # skip chunks beyond the row's live KV
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (chunk, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        _online_softmax_step(
+            q, k, v, j, length, m_ref, l_ref, acc_ref, scale=scale, bs=bs
+        )
+
+    @pl.when(j == nb - 1)
+    def _fini():
+        _scratch_finalize(o_ref, l_ref, acc_ref)
+
+
+def _kernel_quant(
+    len_ref,  # (B,) int32 scalar-prefetch: live KV length per row
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, chunk, 1, pd) uint8 — one packed cache-row chunk, one head
+    v_ref,  # (1, chunk, 1, pd) uint8
+    ks_ref,  # (1, chunk, 1, ng) f32 scales
+    km_ref,  # (1, chunk, 1, ng) f32 mins
+    vs_ref,  # (1, chunk, 1, ng) f32
+    vm_ref,  # (1, chunk, 1, ng) f32
+    o_ref,  # (1, 1, G, hd)
+    m_ref,  # (G,) f32
+    l_ref,  # (G,) f32
+    acc_ref,  # (G, hd) f32
+    *,
+    scale: float,
+    bs: int,
+    nb: int,
+    bits: int,
+    group: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _scratch_init(m_ref, l_ref, acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * bs < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = _dequant_page(
+            k_ref[0, :, 0], ks_ref[0, :, 0], km_ref[0, :, 0], bits=bits, group=group
+        )
+        v = _dequant_page(
+            v_ref[0, :, 0], vs_ref[0, :, 0], vm_ref[0, :, 0], bits=bits, group=group
+        )
+        _online_softmax_step(
+            q, k, v, j, length, m_ref, l_ref, acc_ref, scale=scale, bs=bs
+        )
+
+    @pl.when(j == nb - 1)
+    def _fini():
+        _scratch_finalize(o_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_bits", "kv_group", "interpret"))
+def dense_decode(
+    q: jax.Array,  # (B, K, G, hd) — one decode token per row
+    k: jax.Array,  # (B, max_len, K, hd | packed_dim)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32 live KV length (incl. current token)
+    *,
+    k_scale: jax.Array | None = None,  # (B, max_len, K, hd/group) f32
+    k_min: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    v_min: jax.Array | None = None,
+    kv_bits: int = 16,
+    kv_group: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token decode attention over dense per-slot cache rows.
+    Returns (B, K, G, hd).
+
+    Rows may sit at arbitrary lengths (ragged continuous batching):
+    positions >= ``lengths[b]`` are masked out of the softmax and whole
+    chunks past the live length are never loaded. With ``kv_bits in (4, 8)``
+    the rows hold uint8 codes and the four qparam planes are required;
+    dequant happens inside the kernel, after the HBM->VMEM DMA, so only
+    packed bytes stream from HBM.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, kh, g, hd = q.shape
+    _, s, _, _ = k.shape
+    bs = chunk_for(s)
+    nb = s // bs
+    scale = hd**-0.5
+
+    def q_index(bb, h, j, ln):
+        return (bb, h, 0, 0)
+
+    def kv_index(bb, h, j, ln):
+        return (bb, j, h, 0)
+
+    # fp and quantized paths share the grid/scratch/output scaffolding and
+    # differ only in the KV operand list (+ the kernel body that unpacks it)
+    kernel = functools.partial(_kernel, scale=scale, bs=bs, nb=nb)
+    kv_specs = [pl.BlockSpec((1, bs, 1, k.shape[-1]), kv_index)] * 2
+    kv_args = [k, v]
+    if kv_bits != 16:
+        assert (
+            k_scale is not None
+            and k_min is not None
+            and v_scale is not None
+            and v_min is not None
+        ), "quantized cache rows need their scale/min planes"
+        ng = k_scale.shape[-1]
+        assert kv_group * ng == hd, (kv_group, ng, hd)
+        kernel = functools.partial(
+            _kernel_quant, scale=scale, bs=bs, nb=nb, bits=kv_bits, group=kv_group
+        )
+        kv_specs += [pl.BlockSpec((1, bs, 1, ng), kv_index)] * 4
+        kv_args += [k_scale, k_min, v_scale, v_min]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nb),
+        in_specs=[pl.BlockSpec((1, 1, g, hd), q_index), *kv_specs],
+        out_specs=pl.BlockSpec((1, 1, g, hd), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, *kv_args)

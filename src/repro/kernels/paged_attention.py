@@ -59,6 +59,20 @@ def _online_softmax_step(q, k, v, j, length, m_ref, l_ref, acc_ref, *, scale, bs
     m_ref[...] = m_new
 
 
+def _scratch_init(m_ref, l_ref, acc_ref):
+    """Reset the streaming-softmax running state at the first KV block."""
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _scratch_finalize(o_ref, l_ref, acc_ref):
+    """Write the normalized accumulator to the (1, 1, G, hd) output block."""
+    o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+        o_ref.dtype
+    )
+
+
 def _dequant_page(codes, s, mn, *, bits, group):
     """Fused in-VMEM dequant of one page's one KV head: uint8 codes
     (bs, packed_dim) + f32 qparams (bs, hd/group) -> f32 (bs, hd).
@@ -90,9 +104,7 @@ def _kernel(
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _scratch_init(m_ref, l_ref, acc_ref)
 
     length = len_ref[b]
 
@@ -107,9 +119,7 @@ def _kernel(
 
     @pl.when(j == nb - 1)
     def _fini():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
-            o_ref.dtype
-        )
+        _scratch_finalize(o_ref, l_ref, acc_ref)
 
 
 def _kernel_quant(
@@ -138,9 +148,7 @@ def _kernel_quant(
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _scratch_init(m_ref, l_ref, acc_ref)
 
     length = len_ref[b]
 
@@ -159,9 +167,7 @@ def _kernel_quant(
 
     @pl.when(j == nb - 1)
     def _fini():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
-            o_ref.dtype
-        )
+        _scratch_finalize(o_ref, l_ref, acc_ref)
 
 
 @functools.partial(

@@ -67,6 +67,43 @@ def paged_attention_ref(
     return jnp.einsum("bkgs,bskd->bkgd", w, v)
 
 
+def dense_decode_ref(
+    q: jax.Array,  # (B, K, G, hd)
+    k: jax.Array,  # (B, max_len, K, hd)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) live KV length per row (incl. current token)
+) -> jax.Array:
+    """Pure-JAX masked dense decode attention: each row attends over its own
+    cache row under a per-slot validity mask, fp32 softmax. (B, K, G, hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bkgd,bskd->bkgs", q, k) / (hd**0.5)
+    scores = scores.astype(jnp.float32)
+    valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgs,bskd->bkgd", w, v)
+
+
+def dense_decode_quant_ref(
+    q: jax.Array,  # (B, K, G, hd)
+    k_q: jax.Array,  # uint8 (B, max_len, K, packed_dim)
+    v_q: jax.Array,
+    lengths: jax.Array,
+    k_s: jax.Array,  # (B, max_len, K, hd/group) f32
+    k_m: jax.Array,
+    v_s: jax.Array,
+    v_m: jax.Array,
+    bits: int,
+    group: int,
+) -> jax.Array:
+    """Quantized dense decode attention oracle: dequantize the whole cache
+    row in full precision, then run the fp oracle — exactly the pre-kernel
+    XLA path the fused kernel replaces, and the semantics it must match."""
+    kd = kv_dequant_ref(k_q, k_s, k_m, bits, group, q.dtype)
+    vd = kv_dequant_ref(v_q, v_s, v_m, bits, group, q.dtype)
+    return dense_decode_ref(q, kd, vd, lengths)
+
+
 def kv_dequant_ref(
     codes: jax.Array,  # uint8 (..., packed_dim)
     scale: jax.Array,  # f32 (..., hd/group)

@@ -35,11 +35,21 @@ def main():
                     help="KV-cache storage bits (16 = model dtype, no quant)")
     ap.add_argument("--kv-group", type=int, default=32,
                     help="channels per KV quant group along head_dim (<=0: whole head)")
+    ap.add_argument("--dense-decode-impl", default="auto",
+                    choices=("auto", "pallas", "ref"),
+                    help="dense decode attention: Pallas kernel vs pure-JAX ref")
+    ap.add_argument("--paged-attn-impl", default="auto",
+                    choices=("auto", "pallas", "ref"),
+                    help="paged decode attention: Pallas kernel vs pure-JAX ref")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     if args.kv_bits != 16:
         cfg = cfg.replace(kv_bits=args.kv_bits, kv_group=args.kv_group)
+    cfg = cfg.replace(
+        dense_decode_impl=args.dense_decode_impl,
+        paged_attn_impl=args.paged_attn_impl,
+    )
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     kw = dict(

@@ -122,6 +122,41 @@ def _paged_attention(q, pages, block_tables, lengths, cfg):
     )
 
 
+def _dense_decode(q, rows, lengths, cfg):
+    """Dispatch single-token dense decode attention over per-slot cache rows:
+    Pallas streaming-softmax kernel on TPU (or when forced via
+    ``cfg.dense_decode_impl='pallas'``, interpreted off-TPU), pure-JAX masked
+    reference otherwise (CPU tests). ``rows`` is the already-written dense
+    cache leaf-dict — fp {'k','v'} or quantized (+ scale/min planes); low-bit
+    rows are dequantized *inside* the kernel so only packed codes and qparam
+    planes are read from HBM, never a full-precision ``(B, max_len)`` cache."""
+    impl = cfg.dense_decode_impl
+    quant = "k_q" in rows
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from repro.kernels.dense_decode import dense_decode
+
+        qparams = {}
+        if quant:
+            qparams = dict(
+                k_scale=rows["k_s"], k_min=rows["k_m"],
+                v_scale=rows["v_s"], v_min=rows["v_m"],
+                kv_bits=cfg.kv_bits, kv_group=cfg.kv_qgroup,
+            )
+        kk, vv = (rows["k_q"], rows["v_q"]) if quant else (rows["k"], rows["v"])
+        return dense_decode(
+            q, kk, vv, lengths, interpret=interpret_default(), **qparams
+        )
+    from repro.kernels import ref
+
+    if quant:
+        return ref.dense_decode_quant_ref(
+            q, rows["k_q"], rows["v_q"], lengths,
+            rows["k_s"], rows["k_m"], rows["v_s"], rows["v_m"],
+            cfg.kv_bits, cfg.kv_qgroup,
+        )
+    return ref.dense_decode_ref(q, rows["k"], rows["v"], lengths)
+
+
 def attn_apply(
     p: dict,
     cfg: ModelConfig,
@@ -213,7 +248,7 @@ def attn_apply(
         if cache is not None and not cross:
             # Decode: write each row's new K/V at that row's own position
             # (batched dynamic_update_slice via vmap -> scatter), then attend
-            # over the whole cache under a per-row validity mask.
+            # over the cache masked at each row's live length.
             def row_write(c_row, new_row, p):
                 return jax.lax.dynamic_update_slice(
                     c_row, new_row.astype(c_row.dtype), (p,) + (0,) * (c_row.ndim - 1)
@@ -221,9 +256,9 @@ def attn_apply(
 
             write = jax.vmap(row_write)
             if "k_q" in cache:
-                # Quantized dense rows: quantize-on-write the new token(s),
-                # then attend over the dequantized cache (the XLA analogue of
-                # the fused paged kernel — the reference semantics).
+                # Quantized dense rows: quantize-on-write the new token(s);
+                # the fused decode kernel below reads back only the packed
+                # codes + qparam planes (dequant happens in VMEM).
                 bits, grp = cfg.kv_bits, cfg.kv_qgroup
                 kc, ks, km = kv_quantize(k, bits, grp)  # (B, Sq, K, ...)
                 vc, vs, vm = kv_quantize(v, bits, grp)
@@ -235,6 +270,28 @@ def attn_apply(
                     "v_s": write(cache["v_s"], vs, pos_vec),
                     "v_m": write(cache["v_m"], vm, pos_vec),
                 }
+            else:
+                new_cache = {
+                    "k": write(cache["k"], k, pos_vec),
+                    "v": write(cache["v"], v, pos_vec),
+                }
+            if sq == 1:
+                # Single-token decode (the serving hot path): stream the
+                # cache rows through the fused masked dense-decode kernel /
+                # its oracle — each row masked at its own live length, low
+                # bits dequantized in VMEM, no (B, max_len) fp cache ever
+                # materialized in HBM.
+                qp = q[:, 0].reshape(b, kheads, g, hd)
+                out = _dense_decode(qp, new_cache, pos_vec + 1, cfg)
+                out = out.reshape(b, sq, h * hd)
+                y = linear(p["wo"], out, cfg)
+                return lc(y, "batch", "seq", "embed"), new_cache
+            # Multi-token decode burst (not the engine tick path): attend
+            # over the full cache in XLA, dequantizing up front when
+            # quantized. `causal` stays True — each burst token must not see
+            # later tokens written in the same call — and kv_mask bounds the
+            # live cache region per row.
+            if "k_q" in cache:
                 k = kv_dequantize(
                     new_cache["k_q"], new_cache["k_s"], new_cache["k_m"],
                     bits, grp, cfg.dtype,
@@ -244,12 +301,8 @@ def attn_apply(
                     bits, grp, cfg.dtype,
                 )
             else:
-                ck = write(cache["k"], k, pos_vec)
-                cv = write(cache["v"], v, pos_vec)
-                k, v = ck, cv
-                new_cache = {"k": ck, "v": cv}
+                k, v = new_cache["k"], new_cache["v"]
             kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos_vec[:, None] + sq - 1)
-            causal = False  # handled by kv_mask for single-step decode
         elif make_cache:
             if cfg.kv_quant and not cross:
                 # Prefill writes the prompt KV quantized — the same codes the

@@ -84,6 +84,7 @@ class ModelConfig:
     attn_chunk: int = 0  # query-chunked (lazy-softmax) attention; 0 = dense
     use_flash: bool = False  # Pallas flash-attention kernel (TPU runtime)
     paged_attn_impl: str = "auto"  # paged decode: auto | pallas | ref
+    dense_decode_impl: str = "auto"  # dense decode: auto | pallas | ref
     loss_unroll: bool = False  # unroll loss chunks (dry-run cost accounting)
     scan_layers: bool = True  # False: python-unrolled periods (cost modules)
     mamba_chunk: int = 16  # selective-scan inner chunk

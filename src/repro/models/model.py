@@ -391,6 +391,13 @@ class Model:
         block_tables: (B, max_blocks) int32, required iff ``cache`` is a
           paged cache (from :meth:`init_paged_cache`) — maps each row's
           logical KV block index to a physical page in the shared pool.
+
+        Attention dispatch: paged caches go through the paged-attention
+        kernel (``cfg.paged_attn_impl``); dense caches go through the fused
+        masked dense-decode kernel (``cfg.dense_decode_impl``) which masks
+        each row at its own live length and, at ``kv_bits in (4, 8)``,
+        dequantizes the packed codes in VMEM — both engines stream only
+        packed bytes from HBM.
         """
         cfg = self.cfg
         h = embed(params["embed"], tokens, cfg.dtype)

@@ -18,6 +18,13 @@ each request alone at batch size 1. At ``temperature > 0`` the per-token
 single shared host RNG in slot-interleaved order, so concrete token
 sequences differ from a solo run with the same seed.
 
+Decode attention: every tick runs the fused masked dense-decode kernel
+(``cfg.dense_decode_impl``: Pallas on TPU, pure-JAX reference elsewhere) —
+each slot is masked at its own live length, and with ``cfg.kv_bits in
+(4, 8)`` the quantized cache is dequantized inside the kernel, so the dense
+engine streams only packed codes + qparam planes from HBM (the same
+bandwidth story as the paged engine's quantized kernel).
+
 Sampling: greedy (``temperature=0``, the default) or softmax sampling at
 ``temperature > 0`` with a host-side seeded generator. Generation stops at
 ``max_new`` tokens, at cache capacity, or when ``eos_id`` is produced (the
