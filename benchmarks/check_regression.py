@@ -14,6 +14,16 @@ Failure conditions:
 - a metric with baseline 0 (e.g. ``mismatches``) becomes nonzero,
 - a baseline row or table is missing from the current run,
 - the current JSON is stamped ``"failed": true`` (partial harness run).
+
+A table with **no committed baseline** is treated as baseline-establishing:
+the gate warns and moves on instead of failing (otherwise a PR that *adds* a
+benchmark table could never pass the bench-smoke gate — its baseline lands
+in the same PR). The current run's JSON must still exist and must not be
+stamped ``"failed": true``; only the metric comparison is skipped. If *no*
+requested table has a baseline, the gate fails outright — every table
+missing at once means ``--baseline-dir`` is wrong (typo, moved files, bad
+checkout), not a PR full of brand-new benchmarks, and a silently 0-metric
+"PASS" would disable the gate entirely.
 """
 from __future__ import annotations
 
@@ -39,6 +49,8 @@ LOWER_IS_BETTER = {
     "kv8_mismatches",
     "kv4_mismatches",
     "pallas_vs_ref_mismatches",
+    "greedy_mismatches",  # table17: quantized greedy must match fp exactly
+    "oracle_mismatches",  # table17: kernel vs pure-JAX oracle token parity
 }
 HIGHER_IS_BETTER = {
     "vs_fp",  # bandwidth / footprint multiplier over the fp cache
@@ -71,21 +83,33 @@ def load(path: pathlib.Path) -> dict:
 
 def check_table(
     table: str, base_dir: pathlib.Path, cur_dir: pathlib.Path, threshold: float
-) -> list[str]:
-    """Returns a list of human-readable failure strings (empty = pass)."""
+) -> tuple[list[str], bool]:
+    """Returns (human-readable failure strings, baseline-existed flag)."""
     base_path = base_dir / f"BENCH_{table}.json"
     cur_path = cur_dir / f"BENCH_{table}.json"
-    if not base_path.exists():
-        return [f"{table}: no committed baseline at {base_path}"]
     if not cur_path.exists():
-        return [f"{table}: current run produced no {cur_path.name}"]
+        return [f"{table}: current run produced no {cur_path.name}"], base_path.exists()
+    if not base_path.exists():
+        # Baseline-establishing: a table added in this very PR has no
+        # committed baseline yet — warn (so the omission is visible in the
+        # log) but only fail on a broken current run, never on the missing
+        # comparison. (main() still fails if *every* table lacks a baseline.)
+        cur = load(cur_path)
+        if cur.get("failed"):
+            return [f"{table}: current run is marked failed (partial rows)"], False
+        print(
+            f"{table}: WARNING no committed baseline at {base_path} — "
+            f"treating this run as baseline-establishing (0 gated metrics); "
+            f"commit {cur_path.name} to enable gating"
+        )
+        return [], False
     base, cur = load(base_path), load(cur_path)
     if base.get("failed"):
         # a partial baseline would silently gate only a fraction of the
         # intended metrics — refuse until a clean baseline is committed
-        return [f"{table}: committed baseline is marked failed (partial rows)"]
+        return [f"{table}: committed baseline is marked failed (partial rows)"], True
     if cur.get("failed"):
-        return [f"{table}: current run is marked failed (partial rows)"]
+        return [f"{table}: current run is marked failed (partial rows)"], True
     failures: list[str] = []
     cur_rows = {r["name"]: r for r in cur["rows"]}
     gated = 0
@@ -124,7 +148,7 @@ def check_table(
                     f"threshold {threshold * 100:.0f}%)"
                 )
     print(f"{table}: {gated} gated metrics, {len(failures)} regressions")
-    return failures
+    return failures, True
 
 
 def main() -> None:
@@ -141,8 +165,16 @@ def main() -> None:
     base_dir = pathlib.Path(args.baseline_dir)
     cur_dir = pathlib.Path(args.current_dir)
     failures: list[str] = []
+    any_baseline = False
     for table in args.tables:
-        failures += check_table(table, base_dir, cur_dir, args.threshold)
+        fails, had_baseline = check_table(table, base_dir, cur_dir, args.threshold)
+        failures += fails
+        any_baseline = any_baseline or had_baseline
+    if not any_baseline:
+        failures.append(
+            f"no requested table has a baseline under {base_dir} — "
+            "is --baseline-dir pointing at the committed BENCH_*.json files?"
+        )
     if failures:
         print("\nBENCHMARK REGRESSIONS:", file=sys.stderr)
         for f in failures:

@@ -30,6 +30,7 @@ from benchmarks import (
     table14_paged_serving,
     table15_kv_quant,
     table16_dense_decode,
+    table17_state_quant,
     roofline_table,
 )
 
@@ -46,6 +47,7 @@ ALL = {
     "table14": table14_paged_serving.main,
     "table15": table15_kv_quant.main,
     "table16": table16_dense_decode.main,
+    "table17": table17_state_quant.main,
     "roofline": roofline_table.main,
 }
 

@@ -1,0 +1,259 @@
+"""Decode-state quantization study (new table): the two state stores PR 3/4
+left full precision — cross-attention KV (enc-dec / VLM) and recurrent state
+(Mamba h/conv, xLSTM C/n/h) — now ride the same uint8 codec as self-attn KV.
+
+Cross-attention KV is append-free after prefill, so quantizing it is exactly
+the self-attn story: model the bytes the fused decode path streams per tick
+and assert the same >= 3x (kv8) / >= 5x (kv4) reduction as table15/16.
+
+Recurrent state is read-modify-write every tick: the quantization error
+feeds back through the recurrence, so bandwidth modeling alone is not enough
+— this table *measures the drift*. Teacher-forced decoding (same token
+stream through the fp-state and quantized-state models) isolates pure codec
+feedback; the recorded per-tick relative state error curves and greedy-token
+divergence are what the README's "when to leave state_bits=16" guidance
+quotes.
+
+1. Modeled cross-attn KV bytes per decode tick (enc-dec + VLM smoke), per
+   bit-width — gated (deterministic function of config).
+2. Modeled recurrent-state bytes per decode tick (hybrid + xLSTM smoke) —
+   recorded; small state axes make the qparam-plane overhead proportionally
+   larger than for KV, so the ratio is honest, not idealized.
+3. Greedy parity on *trained* smoke models: 8-bit (kv8, and state8 where
+   recurrent) greedy decode must match fp token-for-token, for the enc-dec
+   and hybrid configs — gated at 0 mismatches.
+4. Kernel-vs-oracle parity through the quantized cross-attn decode path
+   (Pallas interpret vs pure-JAX ref) — gated at 0 mismatches.
+5. Drift curves: per-tick max relative state error at state_bits=8/4 over
+   DRIFT_TICKS teacher-forced ticks, plus the first greedy divergence tick
+   of a free-running quantized-state decode — recorded, not gated.
+
+    PYTHONPATH=src python -m benchmarks.table17_state_quant
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core.pipeline import pretrain_fp
+from repro.data import synthetic
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.serve.rollout import decode_state_nodes, greedy_roll, state_rel_error
+
+KV_GROUP = 32  # hd=32 on the smoke archs -> one quant group per head
+BITS = (16, 8, 4)
+DRIFT_TICKS = 256
+GREEDY_TICKS = 48
+TRAIN_STEPS = 120
+
+
+def _train(arch: str):
+    cfg = get_config(arch, smoke=True).replace(
+        dtype=jnp.float32, capacity_factor=16.0
+    )
+    tokens = synthetic.markov_corpus(cfg.vocab, 30_000, seed=0)
+    batches = (
+        synthetic.add_modalities(b, cfg)
+        for b in synthetic.lm_batches(tokens, 8, 32, steps=TRAIN_STEPS, seed=1)
+    )
+    # xLSTM's exponential gating diverges at the default smoke lr
+    lr = 1e-3 if cfg.family == "ssm" else 3e-3
+    model, params = pretrain_fp(cfg, batches, lr=lr)
+    assert all(
+        bool(jnp.isfinite(p).all()) for p in jax.tree.leaves(params)
+    ), f"{arch}: training diverged (non-finite params)"
+    return model.cfg, params, tokens
+
+
+def _quant_cfg(cfg, bits):
+    if bits == 16:
+        return cfg
+    over = dict(kv_bits=bits, kv_group=KV_GROUP)
+    if cfg.family in ("hybrid", "ssm"):
+        over.update(state_bits=bits)
+    return cfg.replace(**over)
+
+
+# -- byte accounting ---------------------------------------------------------
+
+
+def _walk_state_bytes(model, cache) -> tuple[int, int]:
+    """(cross_kv_bytes, recurrent_state_bytes) of a cache tree."""
+    cross = state = 0
+    layout = model.dec_layout if model.cfg.family == "encdec" else model.layout
+
+    def node_bytes(node):
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(node))
+
+    for j, desc in enumerate(layout):
+        slot = cache[f"s{j}"]
+        if desc["mixer"] == "cross":
+            cross += node_bytes(slot["mixer"])
+        elif desc["mixer"] in ("mamba", "mlstm", "slstm"):
+            state += node_bytes(slot["mixer"])
+        if desc.get("cross_extra"):
+            cross += node_bytes(slot["cross"])
+    return cross, state
+
+
+def _modal_batch(cfg, tokens, start, s):
+    """In-distribution prompt (corpus slice) + stub modality inputs. Greedy
+    parity is only meaningful where the trained model has real logit margins
+    — out-of-distribution random tokens produce near-tie logits whose argmax
+    flips under any perturbation, quantization included."""
+    batch = {"tokens": np.asarray(tokens[start : start + s], np.int32)[None, :]}
+    return synthetic.add_modalities(batch, cfg)
+
+
+def _greedy_tokens(model, params, batch, cache_len, n_ticks) -> list[int]:
+    """Batch-1 greedy rollout as a plain token list (shared rollout core)."""
+    toks, _ = greedy_roll(model, params, batch, cache_len, n_ticks)
+    return [int(t) for t in toks[:, 0]]
+
+
+def _drift_curve(cfg, params, tokens, bits) -> tuple[list[float], int]:
+    """Teacher-forced per-tick max relative state error (fp vs state_bits=
+    ``bits``) and the first divergence tick of a free-running greedy decode
+    (-1 = never diverged within DRIFT_TICKS)."""
+    model = Model(cfg)
+    modelq = Model(cfg.replace(state_bits=bits))
+    toks = tokens[:DRIFT_TICKS].astype(np.int32)
+    cache = model.init_cache(1, DRIFT_TICKS + 8)
+    cacheq = modelq.init_cache(1, DRIFT_TICKS + 8)
+    dec, decq = jax.jit(model.decode_step), jax.jit(modelq.decode_step)
+    errs = []
+    for i in range(DRIFT_TICKS):
+        t = jnp.asarray(toks[i : i + 1][None, :])
+        pos = jnp.asarray([i])
+        _, cache = dec(params, cache, t, pos)
+        _, cacheq = decq(params, cacheq, t, pos)
+        errs.append(
+            state_rel_error(
+                decode_state_nodes(cache, 16), decode_state_nodes(cacheq, bits)
+            )
+        )
+
+    # free-running greedy: feed each model its own argmax token
+    first_div = -1
+    cache = model.init_cache(1, DRIFT_TICKS + 8)
+    cacheq = modelq.init_cache(1, DRIFT_TICKS + 8)
+    tf = tq = jnp.asarray(toks[:1][None, :])
+    for i in range(DRIFT_TICKS):
+        pos = jnp.asarray([i])
+        lf, cache = dec(params, cache, tf, pos)
+        lq, cacheq = decq(params, cacheq, tq, pos)
+        tf = jnp.argmax(lf[:, 0], -1)[:, None]
+        tq = jnp.argmax(lq[:, 0], -1)[:, None]
+        if first_div < 0 and int(tf[0, 0]) != int(tq[0, 0]):
+            first_div = i
+    return errs, first_div
+
+
+def main():
+    # -- 1/2. modeled cross-attn KV + recurrent-state bytes per tick ---------
+    for arch, tag in (
+        ("seamless-m4t-large-v2", "encdec"),
+        ("llama-3.2-vision-90b", "vlm"),
+        ("jamba-v0.1-52b", "hybrid"),
+        ("xlstm-1.3b", "xlstm"),
+    ):
+        base = get_config(arch, smoke=True).replace(dtype=jnp.float32)
+        slots, max_len, src_len = 4, 160, 64
+        byt = {}
+        for bits in BITS:
+            model = Model(_quant_cfg(base, bits))
+            cache = model.init_cache(
+                slots, max_len,
+                src_len=src_len if base.family == "encdec" else base.n_vision_tokens,
+            )
+            byt[bits] = _walk_state_bytes(model, cache)
+        kind = 0 if tag in ("encdec", "vlm") else 1
+        name = "cross_kv" if kind == 0 else "state"
+        for bits in BITS:
+            per_tick = byt[bits][kind]
+            ratio = byt[16][kind] / max(per_tick, 1)
+            common.emit(
+                f"table17/{name}_hbm_{tag}_{bits}", 0.0,
+                f"bytes_per_tick={per_tick};vs_fp={ratio:.2f}x",
+            )
+        if kind == 0:
+            assert byt[16][0] / byt[8][0] >= 3.0, (
+                f"{tag}: 8-bit cross KV must cut bytes/tick >=3x vs fp32"
+            )
+            assert byt[16][0] / byt[4][0] >= 5.0, (
+                f"{tag}: 4-bit cross KV must cut bytes/tick >=5x vs fp32"
+            )
+
+    # -- 3. greedy parity on trained smoke models (enc-dec + hybrid) ---------
+    cfg_ed, params_ed, tokens_ed = _train("seamless-m4t-large-v2")
+    batch = _modal_batch(cfg_ed, tokens_ed, 100, 16)
+    out_fp = _greedy_tokens(Model(cfg_ed), params_ed, batch, 96, GREEDY_TICKS)
+    out_q8 = _greedy_tokens(
+        Model(_quant_cfg(cfg_ed, 8)), params_ed, batch, 96, GREEDY_TICKS
+    )
+    mism = sum(a != b for a, b in zip(out_fp, out_q8))
+    assert mism == 0, f"encdec kv8 greedy diverged at {mism}/{GREEDY_TICKS} ticks"
+    common.emit(
+        "table17/greedy_encdec_kv8", 0.0,
+        f"greedy_mismatches={mism}/{GREEDY_TICKS}",
+    )
+
+    # -- 4. kernel-vs-oracle parity through the cross-attn decode path -------
+    outs = {}
+    for impl in ("ref", "pallas"):
+        cfg_i = _quant_cfg(cfg_ed, 8).replace(dense_decode_impl=impl)
+        outs[impl] = _greedy_tokens(Model(cfg_i), params_ed, batch, 96, GREEDY_TICKS)
+    omism = sum(a != b for a, b in zip(outs["ref"], outs["pallas"]))
+    assert omism == 0, f"cross decode pallas vs ref diverged: {omism}"
+    common.emit(
+        "table17/cross_oracle_parity_kv8", 0.0,
+        f"oracle_mismatches={omism}/{GREEDY_TICKS}",
+    )
+
+    cfg_hy, params_hy, tokens_hy = _train("jamba-v0.1-52b")
+    rng = np.random.default_rng(0)
+    prompts = [
+        tokens_hy[i * 80 : i * 80 + int(rng.integers(4, 14))].astype(np.int32)
+        for i in range(6)
+    ]
+
+    def serve(cfg_s):
+        eng = Engine(Model(cfg_s), params_hy, slots=2, max_len=96)
+        reqs = [Request(rid=i, prompt=p, max_new=12) for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=500)
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs]
+
+    hy_fp = serve(cfg_hy)
+    hy_q8 = serve(_quant_cfg(cfg_hy, 8))
+    hmism = sum(a != b for a, b in zip(hy_fp, hy_q8))
+    assert hmism == 0, f"hybrid kv8+state8 greedy diverged on {hmism}/6 requests"
+    common.emit(
+        "table17/greedy_hybrid_kv8_state8", 0.0, f"greedy_mismatches={hmism}/6"
+    )
+
+    # -- 5. recurrent-state drift curves (trained hybrid + xLSTM) ------------
+    cfg_xl, params_xl, tokens_xl = _train("xlstm-1.3b")
+    for tag, cfg_t, params_t, toks_t in (
+        ("hybrid", cfg_hy, params_hy, tokens_hy),
+        ("xlstm", cfg_xl, params_xl, tokens_xl),
+    ):
+        for bits in (8, 4):
+            errs, first_div = _drift_curve(cfg_t, params_t, toks_t, bits)
+            errs = np.asarray(errs)
+            common.emit(
+                f"table17/state_drift_{tag}_s{bits}", 0.0,
+                f"err_t16={errs[15]:.4f};err_t64={errs[63]:.4f}"
+                f";err_t128={errs[127]:.4f};err_t256={errs[-1]:.4f}"
+                f";max_err={errs.max():.4f};greedy_first_div={first_div}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,17 @@ group), in pages for the paged engine and per-row chunks for the dense one.
 
 ``kv_bits == 16`` means "disabled": the cache stays in the model dtype and
 every code path is byte-identical to the unquantized engines.
+
+The same codec also serves the two non-self-attention decode-state stores:
+
+* **cross-attention KV** (enc-dec / VLM) is append-free after prefill, so it
+  is quantized once at cache construction with :func:`kv_quantize` and
+  dequantized inside the fused decode kernels, exactly like self-attn KV;
+* **recurrent state** (Mamba ``h``/``conv``, xLSTM ``C``/``n``/``h``) is
+  read-modify-written every tick, so :func:`state_quantize` /
+  :func:`state_dequantize` wrap whole state dicts — quantize-on-write,
+  dequantize-on-read — and the quantization error feeds back through the
+  recurrence (see ``benchmarks/table17_state_quant.py`` for the drift study).
 """
 from __future__ import annotations
 
@@ -32,6 +43,9 @@ __all__ = [
     "kv_quantize",
     "kv_unpack",
     "kv_dequantize",
+    "state_group_for",
+    "state_quantize",
+    "state_dequantize",
 ]
 
 KV_BITS = (4, 8, 16)
@@ -45,9 +59,17 @@ def kv_enabled(bits: int) -> bool:
 
 
 def kv_group_for(hd: int, kv_group: int) -> int:
-    """Effective quant-group size along the head dim: ``kv_group`` clamped to
-    ``hd`` (0 / negative = one group per head). Must divide ``hd``."""
-    g = kv_group if 0 < kv_group <= hd else hd
+    """Effective quant-group size along the head dim: ``0`` / negative means
+    one group per head (``hd``). Must divide ``hd``; a group *larger* than the
+    head dim is rejected rather than silently clamped — a typo'd flag
+    (``kv_group=256`` on ``hd=128``) would otherwise change accuracy with no
+    signal."""
+    if kv_group > hd:
+        raise ValueError(
+            f"kv_group={kv_group} exceeds head_dim={hd} — use kv_group<=0 "
+            "for one group per head"
+        )
+    g = kv_group if kv_group > 0 else hd
     if hd % g:
         raise ValueError(f"kv_group={g} must divide head_dim={hd}")
     return g
@@ -106,3 +128,70 @@ def kv_dequantize(
     xg = x.reshape(*x.shape[:-1], hd // group, group)
     out = xg * scale[..., None] + mn[..., None]
     return out.reshape(*x.shape[:-1], hd).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-state trees (Mamba h/conv, xLSTM C/n/h)
+# ---------------------------------------------------------------------------
+#
+# A recurrent mixer's decode state is a flat dict of arrays quantized along
+# each leaf's last axis. Quantized leaf ``x`` is stored as three flat keys —
+# ``x`` (uint8 codes), ``x_s`` / ``x_m`` (float32 scale/min planes) — so the
+# tree stays a plain dict of arrays (engine slot writes / resets need no new
+# cases). ``keep`` names leaves that must stay full precision (the sLSTM
+# ``m`` stabilizer lives in log domain, where uniform quantization of its
+# absolute value is meaningless).
+
+
+def state_group_for(last: int, group: int, name: str = "") -> int:
+    """Per-leaf state quant-group size. State leaves have heterogeneous last
+    axes (Mamba's ``d_state`` vs its conv channels vs xLSTM's head dim), so a
+    single ``state_group`` is interpreted *per leaf*: larger than the axis
+    means one group per vector — unlike ``kv_group``, where the axis (head
+    dim) is uniform and an oversized group is a typo worth rejecting. When
+    smaller, it must divide the axis."""
+    g = min(group, last) if group > 0 else last
+    if last % g:
+        raise ValueError(
+            f"state_group={group} must divide state leaf "
+            f"{name + ' ' if name else ''}last axis {last} (or exceed it)"
+        )
+    return g
+
+
+def state_quantize(
+    state: dict, bits: int, group: int = 0, *, keep: tuple[str, ...] = ()
+) -> dict:
+    """Quantize every leaf of a recurrent-state dict along its last axis."""
+    out: dict = {}
+    for name, x in state.items():
+        if name in keep:
+            out[name] = x
+            continue
+        if bits == 4 and x.shape[-1] % 2:
+            raise ValueError(
+                f"4-bit state packing needs an even last axis, but state "
+                f"leaf {name!r} has {x.shape[-1]}"
+            )
+        g = state_group_for(x.shape[-1], group, name)
+        codes, s, mn = kv_quantize(x, bits, g)
+        out[name] = codes
+        out[f"{name}_s"] = s
+        out[f"{name}_m"] = mn
+    return out
+
+
+def state_dequantize(state: dict, bits: int, group: int = 0) -> dict:
+    """Inverse of :func:`state_quantize`; quantized leaves come back float32
+    (every recurrent mixer casts its state on read anyway)."""
+    out: dict = {}
+    for name, x in state.items():
+        if name.endswith(("_s", "_m")) and name[:-2] in state:
+            continue  # qparam plane of another leaf
+        if f"{name}_s" in state:
+            last = x.shape[-1] * (2 if bits == 4 else 1)
+            g = state_group_for(last, group, name)
+            out[name] = kv_dequantize(x, state[f"{name}_s"], state[f"{name}_m"], bits, g)
+        else:
+            out[name] = x  # kept full precision
+    return out

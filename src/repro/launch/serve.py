@@ -32,9 +32,18 @@ def main():
                     help="serve from the paged KV engine (block tables)")
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--kv-bits", type=int, default=16, choices=(4, 8, 16),
-                    help="KV-cache storage bits (16 = model dtype, no quant)")
+                    help="KV-cache storage bits, self- and cross-attention "
+                         "(16 = model dtype, no quant)")
     ap.add_argument("--kv-group", type=int, default=32,
                     help="channels per KV quant group along head_dim (<=0: whole head)")
+    ap.add_argument("--state-bits", type=int, default=16, choices=(4, 8, 16),
+                    help="recurrent decode-state storage bits — Mamba h/conv, "
+                         "xLSTM C/n/h (16 = off; see benchmarks/table17 before "
+                         "dropping below 8)")
+    ap.add_argument("--state-group", type=int, default=0,
+                    help="channels per state quant group, applied per state "
+                         "leaf (<=0 or larger than a leaf's last axis: that "
+                         "whole axis)")
     ap.add_argument("--dense-decode-impl", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="dense decode attention: Pallas kernel vs pure-JAX ref")
@@ -46,6 +55,8 @@ def main():
     cfg = get_config(args.arch, smoke=True)
     if args.kv_bits != 16:
         cfg = cfg.replace(kv_bits=args.kv_bits, kv_group=args.kv_group)
+    if args.state_bits != 16:
+        cfg = cfg.replace(state_bits=args.state_bits, state_group=args.state_group)
     cfg = cfg.replace(
         dense_decode_impl=args.dense_decode_impl,
         paged_attn_impl=args.paged_attn_impl,
@@ -79,6 +90,9 @@ def main():
           f"({toks/dt:.1f} tok/s on CPU interpret)")
     print(f"stats: {engine.stats.summary()}")
     print(f"kv cache bytes: {engine.kv_cache_bytes():,} (kv_bits={cfg.kv_bits})")
+    if engine.state_bytes():
+        print(f"recurrent state bytes: {engine.state_bytes():,} "
+              f"(state_bits={cfg.state_bits})")
 
 
 if __name__ == "__main__":

@@ -186,10 +186,32 @@ def attn_apply(
 
     if cross and cache is not None:
         # Cross K/V were computed at prefill and are immutable.
-        k, v = cache["k"], cache["v"]
         new_cache = cache
         kv_mask = None
         causal = False
+        if "k_q" in cache:
+            # Quantized cross cache: append-free, so codes were written once
+            # at make_cache. Single-token decode (the serving tick) streams
+            # them through the fused dense-decode kernel / its oracle with a
+            # constant live length — every source position is valid — so
+            # dequant happens in VMEM exactly like self-attn KV.
+            if sq == 1:
+                qp = q[:, 0].reshape(b, kheads, g, hd)
+                src_len = jnp.full((b,), cache["k_q"].shape[1], jnp.int32)
+                out = _dense_decode(qp, cache, src_len, cfg)
+                out = out.reshape(b, sq, h * hd)
+                y = linear(p["wo"], out, cfg)
+                return lc(y, "batch", "seq", "embed"), new_cache
+            # Multi-token burst: dequantize up front and fall through to SDPA.
+            bits, grp = cfg.kv_bits, cfg.kv_qgroup
+            k = kv_dequantize(
+                cache["k_q"], cache["k_s"], cache["k_m"], bits, grp, cfg.dtype
+            )
+            v = kv_dequantize(
+                cache["v_q"], cache["v_s"], cache["v_m"], bits, grp, cfg.dtype
+            )
+        else:
+            k, v = cache["k"], cache["v"]
     else:
         src = kv_src if cross else x
         k = _split_heads(linear(p["wk"], src, cfg), kheads, hd)
@@ -304,10 +326,13 @@ def attn_apply(
                 k, v = new_cache["k"], new_cache["v"]
             kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos_vec[:, None] + sq - 1)
         elif make_cache:
-            if cfg.kv_quant and not cross:
+            if cfg.kv_quant:
                 # Prefill writes the prompt KV quantized — the same codes the
                 # paged engine scatters into pages, so dense and paged caches
-                # hold bit-identical low-bit KV for the same tokens.
+                # hold bit-identical low-bit KV for the same tokens. Cross KV
+                # (append-free) is quantized here once and only ever read
+                # back through the fused decode paths; prefill itself still
+                # attends over the exact fp K/V (same asymmetry as self-attn).
                 bits, grp = cfg.kv_bits, cfg.kv_qgroup
                 kc, ks, km = kv_quantize(k, bits, grp)
                 vc, vs, vm = kv_quantize(v, bits, grp)

@@ -74,8 +74,13 @@ class ModelConfig:
     fq_variant: str = "szW"  # Table-6 trainable-parameter scheme (fake_quant)
     use_kernel: bool = False  # Pallas fused dequant-matmul in quantized mode
     # --- KV-cache quantization (serving; 16 = store KV in `dtype`) ---
-    kv_bits: int = 16  # self-attn KV storage bits: 4 | 8 | 16
+    kv_bits: int = 16  # self-attn + cross-attn KV storage bits: 4 | 8 | 16
     kv_group: int = 32  # channels per KV quant group along head_dim (<=0: hd)
+    # --- recurrent-state quantization (Mamba h/conv, xLSTM C/n/h) ---
+    state_bits: int = 16  # decode-state storage bits: 4 | 8 | 16 (= off)
+    # channels per state quant group, interpreted per leaf (state axes are
+    # heterogeneous): <=0 or larger than a leaf's last axis = whole axis
+    state_group: int = 0
     # --- runtime ---
     dtype: Any = jnp.bfloat16
     remat: bool = True
@@ -103,10 +108,17 @@ class ModelConfig:
 
     @property
     def kv_qgroup(self) -> int:
-        """Effective KV quant-group size (kv_group clamped to head_dim)."""
+        """Effective KV quant-group size (kv_group validated against head_dim)."""
         from repro.core.kv_quant import kv_group_for
 
         return kv_group_for(self.hd, self.kv_group)
+
+    @property
+    def state_quant(self) -> bool:
+        """True when recurrent decode state is stored in low-bit codes."""
+        from repro.core.kv_quant import kv_enabled
+
+        return kv_enabled(self.state_bits)
 
     @property
     def is_causal_lm(self) -> bool:

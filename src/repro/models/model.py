@@ -430,12 +430,19 @@ class Model:
         (batch, cache_len, K, hd) rows. Recurrent states and cross-attention
         KV stay dense per-slot either way.
 
-        With ``cfg.kv_bits in (4, 8)`` the self-attn KV leaves shrink to the
-        packed code dtype (uint8, two channels per byte at 4-bit) plus
-        float32 scale/min planes (one value per ``cfg.kv_qgroup`` channels):
-        paged pools carry {'k_pages','v_pages','k_scale','k_min','v_scale',
-        'v_min'}, dense rows {'k_q','k_s','k_m','v_q','v_s','v_m'}.
-        Recurrent states and cross-attention KV are never quantized.
+        With ``cfg.kv_bits in (4, 8)`` every attention KV leaf — self *and*
+        cross — shrinks to the packed code dtype (uint8, two channels per
+        byte at 4-bit) plus float32 scale/min planes (one value per
+        ``cfg.kv_qgroup`` channels): paged pools carry {'k_pages','v_pages',
+        'k_scale','k_min','v_scale','v_min'}, dense rows (and cross caches)
+        {'k_q','k_s','k_m','v_q','v_s','v_m'}.
+
+        With ``cfg.state_bits in (4, 8)`` recurrent states (Mamba h/conv,
+        xLSTM C/n/h) are stored as uint8 codes + scale/min planes per leaf
+        (the sLSTM log-domain stabilizer ``m`` stays fp — see
+        :mod:`repro.models.xlstm`); the quantized init leaves are the exact
+        codes of the fp init values, so fresh slots, engine resets, and
+        ``state_quantize`` round-trips stay byte-identical.
         """
         cfg = self.cfg
         k, hd = cfg.n_kv_heads, cfg.hd
@@ -443,6 +450,28 @@ class Model:
         if kv_quant:
             pd = kv_quant_mod.packed_dim(hd, cfg.kv_bits)
             ng = hd // cfg.kv_qgroup
+
+        def kv_rows(length: int) -> Params:
+            """Dense per-slot KV rows (self-attn w/o pages, cross-attn)."""
+            if kv_quant:
+                qshape, pshape = (batch, length, k, ng), (batch, length, k, pd)
+                return {
+                    "k_q": jnp.zeros(pshape, jnp.uint8),
+                    "v_q": jnp.zeros(pshape, jnp.uint8),
+                    "k_s": jnp.zeros(qshape, jnp.float32),
+                    "k_m": jnp.zeros(qshape, jnp.float32),
+                    "v_s": jnp.zeros(qshape, jnp.float32),
+                    "v_m": jnp.zeros(qshape, jnp.float32),
+                }
+            shape = (batch, length, k, hd)
+            return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+        def rec_state(st: Params, keep: tuple[str, ...] = ()) -> Params:
+            if cfg.state_quant:
+                return kv_quant_mod.state_quantize(
+                    st, cfg.state_bits, cfg.state_group, keep=keep
+                )
+            return st
 
         def slot_cache(desc):
             c: Params = {}
@@ -465,49 +494,32 @@ class Model:
                             "k_pages": jnp.zeros(shape, cfg.dtype),
                             "v_pages": jnp.zeros(shape, cfg.dtype),
                         }
-                elif kv_quant:
-                    qshape = (batch, cache_len, k, ng)
-                    pshape = (batch, cache_len, k, pd)
-                    c["mixer"] = {
-                        "k_q": jnp.zeros(pshape, jnp.uint8),
-                        "v_q": jnp.zeros(pshape, jnp.uint8),
-                        "k_s": jnp.zeros(qshape, jnp.float32),
-                        "k_m": jnp.zeros(qshape, jnp.float32),
-                        "v_s": jnp.zeros(qshape, jnp.float32),
-                        "v_m": jnp.zeros(qshape, jnp.float32),
-                    }
                 else:
-                    shape = (batch, cache_len, k, hd)
-                    c["mixer"] = {
-                        "k": jnp.zeros(shape, cfg.dtype),
-                        "v": jnp.zeros(shape, cfg.dtype),
-                    }
+                    c["mixer"] = kv_rows(cache_len)
             elif mx == "cross":
-                shape = (batch, src_len or cfg.n_vision_tokens, k, hd)
-                c["mixer"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+                c["mixer"] = kv_rows(src_len or cfg.n_vision_tokens)
             elif mx == "mamba":
                 di, _, n = ssm.mamba_dims(cfg)
-                c["mixer"] = {
+                c["mixer"] = rec_state({
                     "h": jnp.zeros((batch, di, n), jnp.float32),
                     "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), cfg.dtype),
-                }
+                })
             elif mx == "mlstm":
                 dh = cfg.d_model // cfg.n_heads
-                c["mixer"] = {
+                c["mixer"] = rec_state({
                     "C": jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
                     "n": jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
-                }
+                })
             elif mx == "slstm":
                 d = cfg.d_model
-                c["mixer"] = {
+                c["mixer"] = rec_state({
                     "c": jnp.zeros((batch, d), jnp.float32),
                     "n": jnp.ones((batch, d), jnp.float32),
                     "h": jnp.zeros((batch, d), jnp.float32),
                     "m": jnp.zeros((batch, d), jnp.float32),
-                }
+                }, keep=xlstm.SLSTM_STATE_KEEP)
             if desc.get("cross_extra"):
-                shape = (batch, src_len, k, hd)
-                c["cross"] = {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+                c["cross"] = kv_rows(src_len)
             return c
 
         if cfg.family == "encdec":

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.kv_quant import state_dequantize, state_quantize
 from repro.distributed.sharding import lc
 from repro.models.common import ModelConfig, linear, linear_init, uniform_init
 
@@ -75,8 +76,13 @@ def mamba_apply(
     # recurrence) but part of the uniform mixer signature for ragged decode
     make_cache: bool = False,
 ) -> tuple[jax.Array, dict | None]:
-    """x: (B,S,d). state: {'h': (B,di,N), 'conv': (B,dconv-1,di)} for decode."""
+    """x: (B,S,d). state: {'h': (B,di,N), 'conv': (B,dconv-1,di)} for decode;
+    with ``cfg.state_bits in (4, 8)`` the leaves arrive as uint8 codes +
+    scale/min planes (quantize-on-write / dequantize-on-read — the error
+    feeds back through the recurrence, see ``benchmarks/table17``)."""
     del pos  # recurrent state carries all positional information
+    if state is not None and cfg.state_quant:
+        state = state_dequantize(state, cfg.state_bits, cfg.state_group)
     b, s, _ = x.shape
     di, _, n = mamba_dims(cfg)
     xz = linear(p["in_proj"], x, cfg)
@@ -141,4 +147,6 @@ def mamba_apply(
     out = lc(out, "batch", "seq", "embed")
     if state is None and not make_cache:
         new_state = None
+    elif cfg.state_quant:
+        new_state = state_quantize(new_state, cfg.state_bits, cfg.state_group)
     return out, new_state

@@ -13,11 +13,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.kv_quant import state_dequantize, state_quantize
 from repro.distributed.sharding import lc
 from repro.models.common import ModelConfig, linear, linear_init, uniform_init
 
 MLSTM_CHUNK = 64
 GATE_CLIP = 5.0
+
+# The sLSTM stabilizer ``m`` (xLSTM Eq. 15) lives in log domain; gates are
+# exponentials of differences against it, so uniform min/max quantization of
+# its value is meaningless — it stays full precision under state_bits.
+SLSTM_STATE_KEEP = ("m",)
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +60,8 @@ def mlstm_apply(
     make_cache: bool = False,
 ) -> tuple[jax.Array, dict | None]:
     del pos  # recurrent state carries all positional information
+    if state is not None and cfg.state_quant:
+        state = state_dequantize(state, cfg.state_bits, cfg.state_group)
     b, s, d = x.shape
     h = cfg.n_heads
     dh = d // h
@@ -136,6 +144,8 @@ def mlstm_apply(
     out = lc(out, "batch", "seq", "embed")
     if state is None and not make_cache:
         new_state = None
+    elif cfg.state_quant:
+        new_state = state_quantize(new_state, cfg.state_bits, cfg.state_group)
     return out, new_state
 
 
@@ -169,6 +179,8 @@ def slstm_apply(
     make_cache: bool = False,
 ) -> tuple[jax.Array, dict | None]:
     del pos  # recurrent state carries all positional information
+    if state is not None and cfg.state_quant:
+        state = state_dequantize(state, cfg.state_bits, cfg.state_group)
     b, s, d = x.shape
     h = cfg.n_heads
     dh = d // h
@@ -211,4 +223,8 @@ def slstm_apply(
     new_state = {"c": c1, "n": n1, "h": h1, "m": m1}
     if state is None and not make_cache:
         new_state = None
+    elif cfg.state_quant:
+        new_state = state_quantize(
+            new_state, cfg.state_bits, cfg.state_group, keep=SLSTM_STATE_KEEP
+        )
     return out, new_state

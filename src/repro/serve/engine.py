@@ -23,7 +23,13 @@ Decode attention: every tick runs the fused masked dense-decode kernel
 each slot is masked at its own live length, and with ``cfg.kv_bits in
 (4, 8)`` the quantized cache is dequantized inside the kernel, so the dense
 engine streams only packed codes + qparam planes from HBM (the same
-bandwidth story as the paged engine's quantized kernel).
+bandwidth story as the paged engine's quantized kernel). ``kv_bits`` also
+covers cross-attention KV (quantized once at prefill, append-free, read
+through the same fused path with a constant live length), and
+``cfg.state_bits`` quantizes recurrent decode state (Mamba/xLSTM) with
+quantize-on-write / dequantize-on-read inside the mixers — see
+``benchmarks/table17_state_quant.py`` for the drift study behind its
+default-off setting.
 
 Sampling: greedy (``temperature=0``, the default) or softmax sampling at
 ``temperature > 0`` with a host-side seeded generator. Generation stops at
@@ -42,6 +48,18 @@ import numpy as np
 from repro.models.model import Model
 
 Params = dict[str, Any]
+
+
+def _is_kv_node(node: dict) -> bool:
+    """True for an attention-KV cache leaf-dict — dense fp rows, packed
+    dense rows, or a paged pool. The single classification both byte
+    accountants share: everything under a mixer that is *not* a KV node is
+    recurrent decode state, so the two methods always partition the cache."""
+    return (
+        ("k" in node and "v" in node and node["k"].ndim == 5)
+        or "k_q" in node
+        or "k_pages" in node
+    )
 
 
 @dataclasses.dataclass
@@ -185,15 +203,15 @@ class Engine:
         including scale/min planes when ``cfg.kv_bits < 16`` — the baseline
         the paged/quantized benchmarks compare against. Counts every
         attention KV leaf: on vlm/encdec configs that includes the
-        cross-attention KV, which stays full-precision by design."""
+        cross-attention KV, which rides the same ``kv_bits`` codec as
+        self-attn KV (quantized once at prefill, append-free afterwards).
+        Recurrent state is counted separately by :meth:`state_bytes`."""
         total = 0
 
         def go(node):
             nonlocal total
             if isinstance(node, dict):
-                if "k" in node and "v" in node and node["k"].ndim == 5:
-                    total += node["k"].nbytes + node["v"].nbytes
-                elif "k_q" in node or "k_pages" in node:
+                if _is_kv_node(node):
                     total += sum(leaf.nbytes for leaf in node.values())
                 else:
                     for v in node.values():
@@ -202,9 +220,35 @@ class Engine:
         go(self.cache)
         return total
 
+    def state_bytes(self) -> int:
+        """Recurrent decode-state footprint in bytes (Mamba h/conv, xLSTM
+        C/n/h/m across all periods and slots) — uint8 codes + scale/min
+        planes when ``cfg.state_bits < 16``, fp leaves otherwise. These
+        stream through HBM every tick (read-modify-write), so this is the
+        per-tick state bandwidth the ``state_bits`` knob shrinks."""
+        total = 0
+
+        def go(node):
+            nonlocal total
+            if not isinstance(node, dict) or _is_kv_node(node):
+                return
+            for v in node.values():
+                if isinstance(v, dict):
+                    go(v)
+                else:
+                    total += v.nbytes
+
+        go(self.cache)
+        return total
+
     def _reset_slot(self, slot: int) -> None:
         """Restore a freed slot's cache rows to their init values so stale KV /
         recurrent state cannot influence a newly admitted request.
+
+        The tree-map over the init template covers *every* leaf: packed KV
+        codes and their scale/min qparam planes, cross-attention KV, and
+        recurrent state (quantized or fp) — a freed slot is byte-identical
+        to a fresh one, which the stale-qparam regression test asserts.
 
         Defense-in-depth: the per-row kv validity mask and the prefill
         overwrite already hide a predecessor's state from the decode math;

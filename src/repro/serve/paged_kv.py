@@ -40,7 +40,12 @@ Stale data can never leak: a recycled page is only reachable through a block
 table after its new owner's prefill/decode has overwritten the positions it
 attends to, and positions beyond a row's live length are masked (same
 argument as the dense engine's validity mask), with refcounts guaranteeing a
-live request's pages are never recycled under it.
+live request's pages are never recycled under it. On top of that masking
+argument, pages are **zeroed when their last reference drops** — packed
+codes and scale/min qparam planes alike — so the free list only ever holds
+all-zero pages and an admit -> free -> re-admit cycle is byte-identical to
+a fresh slot (the stale-qparam regression test in
+``tests/test_state_quant.py`` asserts this for both engines).
 """
 from __future__ import annotations
 
@@ -112,12 +117,16 @@ class PagedKVPool:
         self.refcount[blk] = 1
         return blk
 
-    def _decref(self, blk: int) -> None:
+    def _decref(self, blk: int) -> bool:
+        """Drop one reference; True when the page was actually released
+        (refcount hit zero) so the caller can zero its device bytes."""
         self.refcount[blk] -= 1
         assert self.refcount[blk] >= 0
         if self.refcount[blk] == 0:
             self._unregister(blk)
             self._free.append(blk)
+            return True
+        return False
 
     def _unregister(self, blk: int) -> None:
         key = self._block_key.pop(blk, None)
@@ -209,14 +218,21 @@ class PagedKVPool:
             self.block_tables[dst_slot, i] = blk
         self.n_blocks[dst_slot] = n
 
-    def free(self, slot: int) -> None:
+    def free(self, slot: int) -> list[int]:
         """Release a slot's pages (eviction = free-on-done: pages and their
         prefix-cache entries survive only while other live requests share
-        them)."""
+        them). Returns the page ids whose last reference dropped — the
+        engine zeroes those device-side so free-list pages are always
+        all-zero (codes, scale/min planes, fp KV alike) and a re-admitted
+        slot is byte-identical to a fresh one."""
+        released = []
         for i in range(int(self.n_blocks[slot])):
-            self._decref(int(self.block_tables[slot, i]))
+            blk = int(self.block_tables[slot, i])
+            if self._decref(blk):
+                released.append(blk)
         self.block_tables[slot, :] = NULL_PAGE
         self.n_blocks[slot] = 0
+        return released
 
 
 class PagedEngine(Engine):
@@ -328,18 +344,31 @@ class PagedEngine(Engine):
         self._sync_pool_stats()
 
     def _reset_slot(self, slot: int) -> None:
-        """Free the slot's pages and reset its dense (non-paged) cache rows."""
-        self.pool.free(slot)
+        """Free the slot's pages and reset its dense (non-paged) cache rows.
+
+        Pages whose last reference dropped are zeroed device-side — codes
+        *and* scale/min planes (and fp KV when unquantized) — so the free
+        list only ever holds all-zero pages and admit -> free -> re-admit is
+        byte-identical to a fresh slot. Shared pages (prefix reuse / fork)
+        survive untouched until their final holder frees them. Trade-off:
+        uncompiled, each ``.at[].set`` copies the whole pool leaf per free
+        (the same cost profile as every other eager cache update here);
+        masking already guarantees stale bytes are unread, so this buys the
+        byte-level invariant, not correctness."""
+        released = self.pool.free(slot)
         self._reserved[slot] = 0
+
+        def on_pages(node, _):
+            if not released:
+                return node
+            idx = jnp.asarray(released)
+            return {k: v.at[:, idx].set(0) for k, v in node.items()}
 
         def on_dense(full, fresh):
             idx = (0, slot) + (0,) * (fresh.ndim - 2)
             return jax.lax.dynamic_update_slice(full, fresh.astype(full.dtype), idx)
 
-        # paged leaves pass through untouched: pages return via the free list
-        self.cache = _map_cache(
-            self.cache, self._fresh, lambda node, _: node, on_dense
-        )
+        self.cache = _map_cache(self.cache, self._fresh, on_pages, on_dense)
         self.pos[slot] = 0
         self._sync_pool_stats()
 

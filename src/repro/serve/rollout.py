@@ -1,0 +1,77 @@
+"""Small decode-rollout utilities shared by the drift/parity benchmarks
+(``benchmarks/table17_state_quant.py``) and the regression tests: a greedy
+prefill+decode loop over a fixed-size cache, and a walker that extracts (and
+dequantizes) the recurrent decode-state nodes of a cache tree. Kept in the
+library so the benchmark and the tests can never drift apart on the
+prefill-merge or state-detection logic they both measure with."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv_quant import state_dequantize
+
+
+def greedy_roll(model, params, batch, cache_len: int, n_ticks: int):
+    """Prefill ``batch`` then decode ``n_ticks`` greedy steps.
+
+    Returns ``(tokens, last_logits)``: tokens is an ``(n_ticks + 1, B)``
+    int array (the prefill sample plus one token per tick), last_logits the
+    final step's ``(B, 1, vocab)`` logits as float32.
+    """
+    cfg = model.cfg
+    b, s = batch["tokens"].shape
+    logits, pcache = jax.jit(model.prefill)(params, batch)
+    src_len = s if cfg.family == "encdec" else cfg.n_vision_tokens
+    cache = model.init_cache(b, cache_len, src_len=src_len)
+
+    def merge(c0, cp):
+        if cp is None:
+            return c0
+        if cp.shape == c0.shape:
+            return cp.astype(c0.dtype)
+        # KV computed for s positions -> write into the fixed-size cache
+        return jax.lax.dynamic_update_slice(c0, cp.astype(c0.dtype), (0,) * c0.ndim)
+
+    cache = jax.tree.map(merge, cache, pcache)
+    dec = jax.jit(model.decode_step)
+    toks = [jnp.argmax(logits[:, -1], -1)]
+    for i in range(n_ticks):
+        logits, cache = dec(params, cache, toks[-1][:, None], jnp.full((b,), s + i))
+        toks.append(jnp.argmax(logits[:, 0], -1))
+    return (
+        np.stack([np.asarray(t) for t in toks]),
+        np.asarray(logits, np.float32),
+    )
+
+
+def state_rel_error(fp_nodes: dict, q_nodes: dict) -> float:
+    """Max over state leaves of ``|fp - q|_inf / |fp|_inf`` — the drift
+    metric shared by the table17 study and the regression tests. Uses
+    ``np.max`` (NaN-propagating, unlike builtin ``max``) and raises on a
+    non-finite result, so an exploding recurrence can never read as zero
+    drift."""
+    leaf_errs = []
+    for sk in fp_nodes:
+        for name, a in fp_nodes[sk].items():
+            a = np.asarray(a, np.float32)
+            b = np.asarray(q_nodes[sk][name], np.float32)
+            leaf_errs.append(np.abs(a - b).max() / (np.abs(a).max() + 1e-9))
+    e = float(np.max(leaf_errs))
+    if not np.isfinite(e):
+        raise AssertionError("non-finite decode state (recurrence blew up)")
+    return e
+
+
+def decode_state_nodes(cache: dict, bits: int, group: int = 0) -> dict:
+    """Extract the recurrent-state nodes (Mamba/xLSTM mixers) of a decode
+    cache, dequantized to fp when ``bits`` is 4/8 — attention KV nodes
+    (dense, packed, or paged) are skipped."""
+    out = {}
+    for sk, slot in cache.items():
+        st = slot["mixer"]
+        if not isinstance(st, dict) or "k" in st or "k_q" in st or "k_pages" in st:
+            continue
+        out[sk] = state_dequantize(st, bits, group) if bits != 16 else st
+    return out
