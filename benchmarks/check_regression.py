@@ -34,7 +34,11 @@ import re
 import sys
 
 # Metric keys parsed out of each row's `derived` string, with the direction
-# that counts as a regression. Keys not listed here are informational only.
+# that counts as a regression. Keys not listed here are informational only —
+# unless the recorded JSON itself declares them via its `lower_is_better` /
+# `higher_is_better` lists (see benchmarks/common.py:declare_directions),
+# which lets a table gate latency-style metrics that regress upward (e.g.
+# table18's modeled TTFT percentiles) without growing these global sets.
 LOWER_IS_BETTER = {
     "bytes_per_tick",  # table16: dense-decode HBM traffic per tick
     "bytes_per_token",  # table15/16: KV bytes per cached token
@@ -81,6 +85,22 @@ def load(path: pathlib.Path) -> dict:
     return json.loads(path.read_text())
 
 
+def directions(base: dict, cur: dict) -> tuple[set[str], set[str]]:
+    """Effective (lower, higher) gated-key sets: the built-ins plus both
+    documents' declared direction lists (union, so a metric stays gated
+    while a rename is mid-flight). A key claimed in both directions is a
+    recording bug — fail loudly rather than pick one."""
+    lower = set(LOWER_IS_BETTER)
+    higher = set(HIGHER_IS_BETTER)
+    for doc in (base, cur):
+        lower |= set(doc.get("lower_is_better", ()))
+        higher |= set(doc.get("higher_is_better", ()))
+    both = lower & higher
+    if both:
+        raise ValueError(f"metrics declared in both directions: {sorted(both)}")
+    return lower, higher
+
+
 def check_table(
     table: str, base_dir: pathlib.Path, cur_dir: pathlib.Path, threshold: float
 ) -> tuple[list[str], bool]:
@@ -111,6 +131,7 @@ def check_table(
     if cur.get("failed"):
         return [f"{table}: current run is marked failed (partial rows)"], True
     failures: list[str] = []
+    lower, higher = directions(base, cur)
     cur_rows = {r["name"]: r for r in cur["rows"]}
     gated = 0
     for brow in base["rows"]:
@@ -122,9 +143,9 @@ def check_table(
         bvals = parse_derived(brow.get("derived", ""))
         cvals = parse_derived(crow.get("derived", ""))
         for key, bv in bvals.items():
-            if key in LOWER_IS_BETTER:
+            if key in lower:
                 sign = 1.0
-            elif key in HIGHER_IS_BETTER:
+            elif key in higher:
                 sign = -1.0
             else:
                 continue

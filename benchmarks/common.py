@@ -80,15 +80,35 @@ def timed(fn, *args, repeat: int = 1, **kwargs):
 
 
 RECORDS: list[dict] = []
+# per-table gating-direction metadata, flushed into the JSON next to the rows
+# (see benchmarks/check_regression.py): metric keys the table wants gated as
+# regress-when-up / regress-when-down, beyond the gate's built-in key sets
+DIRECTIONS: dict[str, list[str]] = {}
 
 
 def reset_records() -> None:
     RECORDS.clear()
+    DIRECTIONS.clear()
 
 
 def emit(name: str, us: float, derived: str):
     RECORDS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def declare_directions(
+    *, lower_is_better: tuple[str, ...] = (), higher_is_better: tuple[str, ...] = ()
+) -> None:
+    """Declare gating directions for this table's derived metric keys. The
+    lists land in the table's JSON, so the regression gate learns the
+    direction from the recorded baseline instead of a hard-coded key set —
+    required for latency-style metrics (e.g. table18's TTFT percentiles)
+    that regress *upward*."""
+    both = set(lower_is_better) & set(higher_is_better)
+    if both:
+        raise ValueError(f"metrics declared in both directions: {sorted(both)}")
+    DIRECTIONS.setdefault("lower_is_better", []).extend(lower_is_better)
+    DIRECTIONS.setdefault("higher_is_better", []).extend(higher_is_better)
 
 
 def write_json(
@@ -103,6 +123,9 @@ def write_json(
     out = pathlib.Path(directory) / f"BENCH_{table}.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     doc: dict = {"table": table, "rows": RECORDS}
+    for direction, keys in DIRECTIONS.items():
+        if keys:
+            doc[direction] = sorted(set(keys))
     if failed:
         doc["failed"] = True
     out.write_text(json.dumps(doc, indent=2) + "\n")

@@ -31,6 +31,7 @@ from benchmarks import (
     table15_kv_quant,
     table16_dense_decode,
     table17_state_quant,
+    table18_arrival_serving,
     roofline_table,
 )
 
@@ -48,6 +49,7 @@ ALL = {
     "table15": table15_kv_quant.main,
     "table16": table16_dense_decode.main,
     "table17": table17_state_quant.main,
+    "table18": table18_arrival_serving.main,
     "roofline": roofline_table.main,
 }
 

@@ -31,6 +31,16 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV engine (block tables)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prefill chunk size for the unified scheduler: each "
+                         "tick merges up to this many prompt tokens per "
+                         "admitted slot with the live decode rows (0 = legacy "
+                         "whole-prompt prefill at admission; recurrent-state "
+                         "families always fall back to whole-prompt)")
+    ap.add_argument("--max-tick-tokens", type=int, default=0,
+                    help="per-tick valid-token budget across all rows; decode "
+                         "rows are never throttled, prefill chunks shrink to "
+                         "fit (0 = unlimited)")
     ap.add_argument("--kv-bits", type=int, default=16, choices=(4, 8, 16),
                     help="KV-cache storage bits, self- and cross-attention "
                          "(16 = model dtype, no quant)")
@@ -66,6 +76,7 @@ def main():
     kw = dict(
         slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
+        prefill_chunk=args.prefill_chunk, max_tick_tokens=args.max_tick_tokens,
     )
     if args.paged:
         engine = PagedEngine(model, params, block_size=args.block_size, **kw)

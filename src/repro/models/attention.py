@@ -169,6 +169,7 @@ def attn_apply(
     make_cache: bool = False,
     is_cross: bool = False,  # cross-attn even when kv_src is None (decode)
     block_tables: jax.Array | None = None,  # (B, max_blocks) paged decode only
+    seq_lens: jax.Array | None = None,  # (B,) valid tokens per ragged row
 ) -> tuple[jax.Array, dict | None]:
     h, kheads, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     b, sq, _ = x.shape
@@ -223,32 +224,47 @@ def attn_apply(
             k_pos = pos_vec[:, None] + jnp.arange(k.shape[1])[None, :]
             k = apply_rope(k, k_pos, cfg.rope_theta)
         kv_mask = None
+        # Per-row live cache length after this step's writes: ragged rows
+        # (mixed prefill-chunk + decode, `seq_lens` given) contribute only
+        # their valid tokens; aligned rows contribute all sq.
+        live = pos_vec + (seq_lens if seq_lens is not None else sq)
         if cache is not None and not cross and "k_pages" in cache:
             # Paged decode: the KV cache is a pool of fixed-size pages shared
             # by all slots. Write the new K/V at each row's frontier page
             # (block-table lookup + flat scatter), then attend over only that
             # row's live pages. Empty rows index the reserved null page 0.
-            if sq != 1:
-                raise ValueError("paged KV cache supports single-token decode only")
+            if sq != 1 and seq_lens is None:
+                raise ValueError(
+                    "paged KV cache needs seq_lens for multi-token rows "
+                    "(unified-step chunked prefill)"
+                )
             if block_tables is None:
                 raise ValueError("paged cache needs block_tables")
             nb, bs_pg = cache["k_pages"].shape[0], cache["k_pages"].shape[1]
-            blk = jnp.take_along_axis(
-                block_tables, (pos_vec // bs_pg)[:, None], axis=1
-            )[:, 0]
-            flat = blk * bs_pg + pos_vec % bs_pg  # (B,) physical token slots
+            max_blocks = block_tables.shape[1]
+            p_idx = pos_vec[:, None] + jnp.arange(sq)[None, :]  # (B, Sq)
+            bi = jnp.minimum(p_idx // bs_pg, max_blocks - 1)
+            blk = jnp.take_along_axis(block_tables, bi, axis=1)  # (B, Sq)
+            flat = blk * bs_pg + p_idx % bs_pg  # (B, Sq) physical token slots
+            if seq_lens is not None:
+                # invalid (padding / idle-row) positions scatter out of
+                # bounds and are dropped — they must never touch the pool
+                valid = jnp.arange(sq)[None, :] < seq_lens[:, None]
+                flat = jnp.where(valid, flat, nb * bs_pg)
 
             def scatter(pages, new):
+                # new: (B, Sq, K, X) per-position planes
                 flatp = pages.reshape(nb * bs_pg, *pages.shape[2:])
-                return flatp.at[flat].set(new.astype(pages.dtype)).reshape(pages.shape)
+                flatp = flatp.at[flat].set(new.astype(pages.dtype), mode="drop")
+                return flatp.reshape(pages.shape)
 
             if cfg.kv_quant:
-                # quantize-on-write: the new token's K/V enter the pool as
+                # quantize-on-write: the new tokens' K/V enter the pool as
                 # packed codes + per-group qparams; attention dequantizes
                 # them inside the kernel (never materialized fp in HBM)
                 bits, grp = cfg.kv_bits, cfg.kv_qgroup
-                kc, ks, km = kv_quantize(k[:, 0], bits, grp)  # (B, K, ...)
-                vc, vs, vm = kv_quantize(v[:, 0], bits, grp)
+                kc, ks, km = kv_quantize(k, bits, grp)  # (B, Sq, K, ...)
+                vc, vs, vm = kv_quantize(v, bits, grp)
                 new_cache = {
                     "k_pages": scatter(cache["k_pages"], kc),
                     "v_pages": scatter(cache["v_pages"], vc),
@@ -259,24 +275,74 @@ def attn_apply(
                 }
             else:
                 new_cache = {
-                    "k_pages": scatter(cache["k_pages"], k[:, 0]),
-                    "v_pages": scatter(cache["v_pages"], v[:, 0]),
+                    "k_pages": scatter(cache["k_pages"], k),
+                    "v_pages": scatter(cache["v_pages"], v),
                 }
-            qp = q[:, 0].reshape(b, kheads, g, hd)
-            out = _paged_attention(qp, new_cache, block_tables, pos_vec + 1, cfg)
-            out = out.reshape(b, sq, h * hd)
-            y = linear(p["wo"], out, cfg)
-            return lc(y, "batch", "seq", "embed"), new_cache
-        if cache is not None and not cross:
+            if sq == 1:
+                # Single-token decode (the serving hot path): the fused paged
+                # kernel / its oracle gathers each row's live pages.
+                qp = q[:, 0].reshape(b, kheads, g, hd)
+                out = _paged_attention(
+                    qp, new_cache, block_tables, jnp.maximum(live, 1), cfg
+                )
+                out = out.reshape(b, sq, h * hd)
+                y = linear(p["wo"], out, cfg)
+                return lc(y, "batch", "seq", "embed"), new_cache
+            # Multi-token prefill-chunk rows (unified step): gather each
+            # row's logical KV from its pages — the just-written chunk
+            # included, so chunked prefill reads back exactly what later
+            # decode ticks will read (quantize-then-dequantize semantics
+            # make the outputs invariant to the chunk partitioning) — then
+            # attend in XLA under the causal + live-length masks. This path
+            # is compute-bound prefill work; the fused kernels stay on the
+            # sq == 1 decode hot path.
+            pos_all = jnp.arange(max_blocks * bs_pg)
+            flat_all = block_tables[:, pos_all // bs_pg] * bs_pg + pos_all % bs_pg
+
+            def gather(pages):
+                flatp = pages.reshape(nb * bs_pg, *pages.shape[2:])
+                return flatp[flat_all]  # (B, max_blocks*bs, K, X)
+
+            if cfg.kv_quant:
+                k = kv_dequantize(
+                    gather(new_cache["k_pages"]), gather(new_cache["k_scale"]),
+                    gather(new_cache["k_min"]), bits, grp, cfg.dtype,
+                )
+                v = kv_dequantize(
+                    gather(new_cache["v_pages"]), gather(new_cache["v_scale"]),
+                    gather(new_cache["v_min"]), bits, grp, cfg.dtype,
+                )
+            else:
+                k = gather(new_cache["k_pages"])
+                v = gather(new_cache["v_pages"])
+            kv_mask = jnp.arange(k.shape[1])[None, :] < live[:, None]
+        elif cache is not None and not cross:
             # Decode: write each row's new K/V at that row's own position
             # (batched dynamic_update_slice via vmap -> scatter), then attend
-            # over the cache masked at each row's live length.
-            def row_write(c_row, new_row, p):
-                return jax.lax.dynamic_update_slice(
-                    c_row, new_row.astype(c_row.dtype), (p,) + (0,) * (c_row.ndim - 1)
+            # over the cache masked at each row's live length. Ragged rows
+            # (`seq_lens` given) instead drop-scatter only their valid
+            # positions, so padding tokens and idle slots never touch the
+            # cache.
+            if seq_lens is None:
+                def row_write(c_row, new_row, p):
+                    return jax.lax.dynamic_update_slice(
+                        c_row, new_row.astype(c_row.dtype),
+                        (p,) + (0,) * (c_row.ndim - 1),
+                    )
+
+                def write(full, new):
+                    return jax.vmap(row_write)(full, new, pos_vec)
+            else:
+                cols = pos_vec[:, None] + jnp.arange(sq)[None, :]  # (B, Sq)
+                cols = jnp.where(
+                    jnp.arange(sq)[None, :] < seq_lens[:, None],
+                    cols, cache["k_q" if "k_q" in cache else "k"].shape[1],
                 )
 
-            write = jax.vmap(row_write)
+                def write(full, new):
+                    return full.at[jnp.arange(b)[:, None], cols].set(
+                        new.astype(full.dtype), mode="drop"
+                    )
             if "k_q" in cache:
                 # Quantized dense rows: quantize-on-write the new token(s);
                 # the fused decode kernel below reads back only the packed
@@ -285,17 +351,17 @@ def attn_apply(
                 kc, ks, km = kv_quantize(k, bits, grp)  # (B, Sq, K, ...)
                 vc, vs, vm = kv_quantize(v, bits, grp)
                 new_cache = {
-                    "k_q": write(cache["k_q"], kc, pos_vec),
-                    "v_q": write(cache["v_q"], vc, pos_vec),
-                    "k_s": write(cache["k_s"], ks, pos_vec),
-                    "k_m": write(cache["k_m"], km, pos_vec),
-                    "v_s": write(cache["v_s"], vs, pos_vec),
-                    "v_m": write(cache["v_m"], vm, pos_vec),
+                    "k_q": write(cache["k_q"], kc),
+                    "v_q": write(cache["v_q"], vc),
+                    "k_s": write(cache["k_s"], ks),
+                    "k_m": write(cache["k_m"], km),
+                    "v_s": write(cache["v_s"], vs),
+                    "v_m": write(cache["v_m"], vm),
                 }
             else:
                 new_cache = {
-                    "k": write(cache["k"], k, pos_vec),
-                    "v": write(cache["v"], v, pos_vec),
+                    "k": write(cache["k"], k),
+                    "v": write(cache["v"], v),
                 }
             if sq == 1:
                 # Single-token decode (the serving hot path): stream the
@@ -304,15 +370,16 @@ def attn_apply(
                 # bits dequantized in VMEM, no (B, max_len) fp cache ever
                 # materialized in HBM.
                 qp = q[:, 0].reshape(b, kheads, g, hd)
-                out = _dense_decode(qp, new_cache, pos_vec + 1, cfg)
+                out = _dense_decode(qp, new_cache, jnp.maximum(live, 1), cfg)
                 out = out.reshape(b, sq, h * hd)
                 y = linear(p["wo"], out, cfg)
                 return lc(y, "batch", "seq", "embed"), new_cache
-            # Multi-token decode burst (not the engine tick path): attend
-            # over the full cache in XLA, dequantizing up front when
-            # quantized. `causal` stays True — each burst token must not see
-            # later tokens written in the same call — and kv_mask bounds the
-            # live cache region per row.
+            # Multi-token rows over a dense cache — decode bursts and the
+            # unified step's prefill-chunk rows: attend over the full cache
+            # in XLA, dequantizing up front when quantized. `causal` stays
+            # True — each token must not see later tokens written in the
+            # same call — and kv_mask bounds the live cache region per row
+            # (ragged rows stop at their own valid-token count).
             if "k_q" in cache:
                 k = kv_dequantize(
                     new_cache["k_q"], new_cache["k_s"], new_cache["k_m"],
@@ -324,7 +391,7 @@ def attn_apply(
                 )
             else:
                 k, v = new_cache["k"], new_cache["v"]
-            kv_mask = jnp.arange(k.shape[1])[None, :] <= (pos_vec[:, None] + sq - 1)
+            kv_mask = jnp.arange(k.shape[1])[None, :] < live[:, None]
         elif make_cache:
             if cfg.kv_quant:
                 # Prefill writes the prompt KV quantized — the same codes the

@@ -108,6 +108,7 @@ def _apply_slot(
     kv_src: jax.Array | None,
     make_cache: bool,
     block_tables: jax.Array | None = None,
+    seq_lens: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     x = rmsnorm(p["ln1"], h, cfg.norm_eps)
@@ -116,7 +117,7 @@ def _apply_slot(
     if mx == "attn":
         y, nc = attention.attn_apply(
             p["mixer"], cfg, x, cache=c_mix, pos=pos, causal=causal,
-            make_cache=make_cache, block_tables=block_tables,
+            make_cache=make_cache, block_tables=block_tables, seq_lens=seq_lens,
         )
     elif mx == "cross":
         y, nc = attention.attn_apply(
@@ -176,6 +177,7 @@ def apply_period(
     kv_src: jax.Array | None = None,
     make_cache: bool = False,
     block_tables: jax.Array | None = None,
+    seq_lens: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Apply one period (group of sub-layers) — also the Block-AP unit."""
     new_caches = {}
@@ -193,6 +195,7 @@ def apply_period(
             kv_src=kv_src,
             make_cache=make_cache,
             block_tables=block_tables,
+            seq_lens=seq_lens,
         )
         new_caches[key] = nc
         aux_total = aux_total + aux
@@ -213,6 +216,7 @@ def _run_stack(
     kv_src: jax.Array | None = None,
     make_cache: bool = False,
     block_tables: jax.Array | None = None,
+    seq_lens: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Scan the period stack. layers/cache leaves have leading n_periods axis."""
 
@@ -223,6 +227,7 @@ def _run_stack(
             return apply_period(
                 slot, layout, cfg, hh, cache=c, pos=pos, causal=causal,
                 kv_src=kv_src, make_cache=make_cache, block_tables=block_tables,
+                seq_lens=seq_lens,
             )
 
         if cfg.remat:  # keep the same remat policy as the scanned path
@@ -251,6 +256,7 @@ def _run_stack(
             kv_src=kv_src,
             make_cache=make_cache,
             block_tables=block_tables,
+            seq_lens=seq_lens,
         )
         return hh, (new_caches, aux_total)
 
@@ -399,17 +405,84 @@ class Model:
         dequantizes the packed codes in VMEM — both engines stream only
         packed bytes from HBM.
         """
+        h, new_cache = self._decode_stack(params, cache, tokens, pos, block_tables)
+        logits = logits_head(params["embed"], h, self.cfg)
+        return logits, new_cache
+
+    def _decode_stack(
+        self, params: Params, cache: Params, tokens: jax.Array, pos,
+        block_tables: jax.Array | None = None, seq_lens: jax.Array | None = None,
+    ) -> tuple[jax.Array, Params]:
+        """Shared decode-path body: embed -> cached stack -> final norm."""
         cfg = self.cfg
         h = embed(params["embed"], tokens, cfg.dtype)
         stack = params["dec"] if cfg.family == "encdec" else params["layers"]
         layout = self.dec_layout if cfg.family == "encdec" else self.layout
         h, new_cache, _ = _run_stack(
             stack, layout, cfg, h, cache=cache, pos=pos, causal=True, kv_src=None,
-            block_tables=block_tables,
+            block_tables=block_tables, seq_lens=seq_lens,
         )
-        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-        logits = logits_head(params["embed"], h, cfg)
-        return logits, new_cache
+        return rmsnorm(params["final_norm"], h, cfg.norm_eps), new_cache
+
+    @property
+    def supports_ragged_rows(self) -> bool:
+        """True when every mixer is attention (self or cross), i.e. the
+        unified step may carry multi-token prefill-chunk rows beside
+        single-token decode rows. Recurrent mixers (Mamba/xLSTM) consume
+        every input token into their state unconditionally, so they cannot
+        skip a ragged row's padding — those families serve through
+        whole-prompt admission instead."""
+        layout = self.dec_layout if self.cfg.family == "encdec" else self.layout
+        return all(d["mixer"] in ("attn", "cross") for d in layout)
+
+    def unified_step(
+        self, params: Params, cache: Params, tokens: jax.Array, pos,
+        seq_lens: jax.Array, block_tables: jax.Array | None = None,
+    ) -> tuple[jax.Array, Params]:
+        """One ragged **unified step**: multi-token prefill-chunk rows and
+        single-token decode rows merged into a single jitted call (the
+        scheduler's tick — Sarathi-style chunked prefill fused with decode).
+
+        tokens: (B, T) — row i's next ``seq_lens[i]`` input tokens, zero-pad
+          beyond (T is the tick's bucket width; all-decode ticks use T=1).
+        pos: (B,) per-row cache write offset — row i's tokens land at
+          ``[pos[i], pos[i] + seq_lens[i])`` (multi-token rows write their
+          whole chunk; RoPE/masks are per-position, per-row).
+        seq_lens: (B,) valid tokens per row — 1 for a decode row, the chunk
+          length for a prefill row, 0 for an idle slot (idle rows write
+          nothing and their outputs are discarded).
+        block_tables: (B, max_blocks) for paged caches, as in decode_step.
+
+        Returns ``(logits, new_cache)`` where logits is (B, vocab): each
+        row's logits at its **last valid token** — the next-token
+        distribution a decode row samples from, and, when a prefill row's
+        chunk is the final chunk of its prompt, the request's first sampled
+        token. Mid-prompt chunk rows' logits are computed but meaningless
+        (the scheduler ignores them until the prompt is complete).
+
+        Families with recurrent mixers accept only T == 1 (see
+        :attr:`supports_ragged_rows`); the engines fall back to whole-prompt
+        admission for them and the unified step degenerates to decode.
+        """
+        sq = tokens.shape[1]
+        if not self.supports_ragged_rows:
+            if sq != 1:
+                raise ValueError(
+                    "chunked prefill needs attention-only mixers; "
+                    f"family '{self.cfg.family}' has recurrent state"
+                )
+            logits, new_cache = self.decode_step(
+                params, cache, tokens, pos, block_tables
+            )
+            return logits[:, 0], new_cache
+        seq_lens = jnp.asarray(seq_lens, jnp.int32)
+        h, new_cache = self._decode_stack(
+            params, cache, tokens, pos, block_tables, seq_lens
+        )
+        last = jnp.clip(seq_lens - 1, 0, sq - 1)  # (B,) last valid index
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+        logits = logits_head(params["embed"], h_last, self.cfg)
+        return logits[:, 0], new_cache
 
     # -- cache construction ---------------------------------------------------
 

@@ -1,29 +1,54 @@
 """Batched serving engine over packed low-bit weights (the deployment story
 of the paper: uniform quantization -> simple fused dequant kernels, Table 10).
 
+Layering: all serving **control flow** — queue, slot table, lookahead
+admission, chunked-vs-whole-prompt prefill, the per-tick token budget, and
+request lifecycle — lives in
+:class:`~repro.serve.scheduler.UnifiedScheduler`. This module provides the
+**backends** behind it: :class:`Engine` owns a dense ``(slots, max_len)``
+cache, the paged subclass swaps in the page pool, and both expose the same
+small hook surface (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` /
+``_on_prefill_done`` / ``_pre_tick`` / ``_unified_tick`` / ``_reset_slot``
+/ ``_sample``) plus the jitted model calls. ``submit`` / ``step`` / ``run``
+and the ``queue`` / ``active`` / ``pos`` views delegate to the scheduler,
+so engine users are unchanged.
+
 Continuous batching with **ragged per-slot positions**: a fixed pool of B
 cache slots; finished sequences free their slot (cache state is reset to its
 init values so stale KV can never leak into the next occupant) and queued
-prompts are prefilled into it at any tick. One jitted decode_step serves the
-whole pool every tick.
+prompts are admitted into it at any tick. With ``prefill_chunk > 0``
+(attention-only families) an admitted prompt is split into fixed-size
+chunks and each tick runs **one ragged unified step**
+(``Model.unified_step``) where multi-token prefill-chunk rows write
+``[pos, pos+n)`` beside single-token decode rows — a long prompt never
+stalls live slots' decode. With ``prefill_chunk == 0`` (the default, and
+the automatic fallback for recurrent-state families) admission runs the
+whole prompt through one jitted ``Model.prefill`` call, the legacy
+behavior.
 
 Position convention: ``self.pos`` is a ``(B,)`` int32 vector — ``pos[i]`` is
 slot *i*'s next cache write offset — and is passed to
-``Model.decode_step(params, cache, tokens, pos)`` as-is. Every slot therefore
-decodes at its own true sequence position (RoPE rotation, KV write offset,
-and KV validity mask are all per-row), so under greedy decoding
-(``temperature=0``) staggered admission is exactly equivalent to running
-each request alone at batch size 1. At ``temperature > 0`` the per-token
-*distributions* still match batch-1 serving, but sampled draws come from a
-single shared host RNG in slot-interleaved order, so concrete token
-sequences differ from a solo run with the same seed.
+``Model.unified_step(params, cache, tokens, pos, seq_lens)`` as-is, with
+``seq_lens[i]`` counting the row's valid tokens (0 = idle slot, writes
+dropped). Every slot therefore runs at its own true sequence position (RoPE
+rotation, KV write offset, and KV validity mask are all per-row), so under
+greedy decoding (``temperature=0``) staggered admission is exactly
+equivalent to running each request alone at batch size 1 — and because
+chunk rows read their own freshly written (quantize-then-dequantize) KV
+exactly like later decode ticks do, greedy outputs are also invariant to
+the chunk partitioning at every ``kv_bits``. At ``temperature > 0`` the
+per-token *distributions* still match batch-1 serving, but sampled draws
+come from a single shared host RNG in slot-interleaved order, so concrete
+token sequences differ from a solo run with the same seed.
 
-Decode attention: every tick runs the fused masked dense-decode kernel
+Decode attention: all-decode ticks run the fused masked dense-decode kernel
 (``cfg.dense_decode_impl``: Pallas on TPU, pure-JAX reference elsewhere) —
 each slot is masked at its own live length, and with ``cfg.kv_bits in
 (4, 8)`` the quantized cache is dequantized inside the kernel, so the dense
 engine streams only packed codes + qparam planes from HBM (the same
-bandwidth story as the paged engine's quantized kernel). ``kv_bits`` also
+bandwidth story as the paged engine's quantized kernel). Mixed ticks (any
+prefill-chunk row) fall back to the masked XLA SDPA path at width
+``prefill_chunk``; only two tick shapes ever compile. ``kv_bits`` also
 covers cross-attention KV (quantized once at prefill, append-free, read
 through the same fused path with a constant live length), and
 ``cfg.state_bits`` quantizes recurrent decode state (Mamba/xLSTM) with
@@ -46,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serve.scheduler import UnifiedScheduler
 
 Params = dict[str, Any]
 
@@ -75,14 +101,18 @@ class Request:
 class EngineStats:
     """Lightweight serving counters, updated on every submit/prefill/tick.
 
-    The paged engine additionally tracks its page pool: ``pages_in_use`` /
-    ``page_high_water`` count physical KV pages (null page excluded) and
-    ``prefix_hits`` counts prompt blocks served from the prefix cache."""
+    ``paged`` marks the engine type: the paged engine additionally tracks
+    its page pool — ``pages_in_use`` / ``page_high_water`` count physical KV
+    pages (null page excluded) and ``prefix_hits`` counts prompt blocks
+    served from the prefix cache. The paged section is keyed off the engine
+    type, not counter truthiness, so a paged run that never allocated a page
+    (or served everything from prefix hits) still prints as paged."""
 
     ticks: int = 0
     tokens: int = 0  # total generated tokens (prefill sample + decode ticks)
-    occupancy_sum: int = 0  # sum over ticks of live slots (avg = /ticks)
+    occupancy_sum: int = 0  # sum over ticks of live rows (avg = /ticks)
     queue_high_water: int = 0
+    paged: bool = False
     pages_in_use: int = 0
     page_high_water: int = 0
     prefix_hits: int = 0
@@ -93,7 +123,7 @@ class EngineStats:
             f"ticks={self.ticks} tokens={self.tokens} "
             f"avg_occupancy={avg_occ:.2f} queue_high_water={self.queue_high_water}"
         )
-        if self.page_high_water:
+        if self.paged:
             s += (
                 f" pages_in_use={self.pages_in_use}"
                 f" page_high_water={self.page_high_water}"
@@ -113,6 +143,9 @@ class Engine:
         temperature: float = 0.0,
         eos_id: int | None = None,
         seed: int = 0,
+        prefill_chunk: int = 0,
+        max_tick_tokens: int = 0,
+        admit_lookahead: int = 8,
     ):
         assert model.cfg.is_causal_lm, "serving engine targets decoder LMs"
         self.model = model
@@ -124,13 +157,35 @@ class Engine:
         self.cache = self._make_cache()
         # one-slot template of the init cache state, written back on free
         self._fresh = self._make_fresh()
-        self.pos = np.zeros(slots, np.int32)  # next write position per slot
-        self.active: list[Request | None] = [None] * slots
-        self.queue: list[Request] = []
         self.stats = EngineStats()
         self._rng = np.random.default_rng(seed)
-        self._decode = jax.jit(model.decode_step)
+        self._unified = jax.jit(model.unified_step)
         self._prefill = jax.jit(model.prefill)
+        if prefill_chunk and not model.supports_ragged_rows:
+            # recurrent mixers scan every input position (padding can't be
+            # masked out of the state update), so chunked ragged rows are
+            # attention-family only — fall back to whole-prompt admission
+            prefill_chunk = 0
+        self.sched = UnifiedScheduler(
+            self,
+            slots=slots,
+            prefill_chunk=prefill_chunk,
+            max_tick_tokens=max_tick_tokens,
+            admit_lookahead=admit_lookahead,
+        )
+
+    # scheduler-owned state, exposed read-only for callers and tests
+    @property
+    def queue(self):
+        return self.sched.queue
+
+    @property
+    def active(self):
+        return self.sched.active
+
+    @property
+    def pos(self) -> np.ndarray:
+        return self.sched.pos
 
     def _make_cache(self) -> Params:
         """Pool-cache constructor hook (the paged engine overrides this)."""
@@ -145,7 +200,7 @@ class Engine:
             1, self.max_len, src_len=self.model.cfg.n_vision_tokens
         )
 
-    # -- admission -------------------------------------------------------------
+    # -- admission hooks ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_len:
@@ -153,28 +208,29 @@ class Engine:
                 f"prompt length {len(req.prompt)} must be < max_len={self.max_len} "
                 "(the cache needs at least one free position to decode into)"
             )
-        self.queue.append(req)
-        self.stats.queue_high_water = max(self.stats.queue_high_water, len(self.queue))
+        self.sched.submit(req)
 
     def _can_admit(self, req: Request) -> bool:
         """Admission-control hook (the paged engine checks pool headroom)."""
         return True
 
-    def _admit(self) -> None:
-        for i in range(self.slots):
-            while self.active[i] is None and self.queue and self._can_admit(self.queue[0]):
-                req = self.queue.pop(0)
-                self._prefill_into(i, req)
-                if req.done:  # prompt immediately hit EOS / budget
-                    self._reset_slot(i)
-                else:
-                    self.active[i] = req
+    def _on_admit(self, slot: int, req: Request) -> int:
+        """Chunked-admission hook: reserve backing storage for the request
+        and return the number of leading prompt positions already resident
+        (dense cache: none; paged: shared prefix pages)."""
+        return 0
+
+    def _on_prefill_done(self, slot: int, req: Request) -> None:
+        """Chunked-prefill-completion hook (paged: publish the prompt's now
+        fully written blocks in the prefix cache)."""
 
     def _prefill_into(self, slot: int, req: Request) -> None:
+        """Whole-prompt admission: one jitted full-sequence prefill, its
+        cache copied into the slot, first token sampled from the last-token
+        logits (the legacy path, and the recurrent-family fallback)."""
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
         logits, pcache = self._prefill(self.params, batch)
         self._write_prefill(slot, req, pcache)
-        self.pos[slot] = len(req.prompt)
         tok = self._sample(np.asarray(logits[0, -1]))
         req.out.append(tok)
         self.stats.tokens += 1
@@ -273,41 +329,32 @@ class Engine:
         p /= p.sum()
         return int(self._rng.choice(p.shape[0], p=p))
 
-    # -- decode tick -------------------------------------------------------------
+    # -- unified tick ------------------------------------------------------------
 
-    def _decode_tick(self, tokens: np.ndarray) -> jax.Array:
-        """Run one jitted decode step over the whole pool; returns logits."""
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.pos)
+    def _pre_tick(self, writes: list[tuple[int, int, int]]) -> None:
+        """Pre-tick storage hook given the rows about to write
+        ``[pos, pos+n)`` (paged: block allocation + copy-on-write)."""
+
+    def _unified_tick(
+        self, tokens: np.ndarray, pos: np.ndarray, seq_lens: np.ndarray
+    ) -> jax.Array:
+        """Run one jitted unified step over the whole pool; returns each
+        row's last-valid-token logits, shape ``(slots, vocab)``."""
+        logits, self.cache = self._unified(
+            self.params,
+            self.cache,
+            jnp.asarray(tokens),
+            jnp.asarray(pos),
+            jnp.asarray(seq_lens),
         )
         return logits
 
-    def step(self) -> None:
-        self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for i in live:
-            tokens[i, 0] = self.active[i].out[-1]
-        logits = self._decode_tick(tokens)
-        self.stats.ticks += 1
-        self.stats.occupancy_sum += len(live)
-        logits_np = np.asarray(logits[:, 0, :])
-        for i in live:  # empty slots' outputs are never decoded
-            req = self.active[i]
-            tok = self._sample(logits_np[i])
-            req.out.append(tok)
-            self.stats.tokens += 1
-            self.pos[i] += 1
-            hit_eos = self.eos_id is not None and tok == self.eos_id
-            if hit_eos or len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
-                req.done = True
-                self.active[i] = None
-                self._reset_slot(i)
+    def _admit(self) -> None:
+        self.sched._admit()
+
+    def step(self) -> int:
+        """Admit + one unified tick; returns valid tokens processed."""
+        return self.sched.step()
 
     def run(self, max_ticks: int = 256) -> None:
-        for _ in range(max_ticks):
-            if not self.queue and not any(self.active):
-                break
-            self.step()
+        self.sched.run(max_ticks)

@@ -23,10 +23,14 @@ module replaces that with the vLLM design:
   paged-attention kernel on TPU, or the pure-JAX gather reference elsewhere
   (see ``repro/kernels/paged_attention.py`` / ``kernels/ref.py``).
 
-Prefill still runs through the dense full-sequence path (flash attention);
-its per-position KV is scattered into pages at admission, skipping positions
-already resident in shared prefix pages. Recurrent states (Mamba/xLSTM) and
-cross-attention KV are not paged — they stay dense per-slot rows.
+Prefill has two routes (picked by the engine's ``prefill_chunk`` knob):
+whole-prompt admission runs the dense full-sequence path (flash attention)
+and scatters its per-position KV into pages at admission, skipping
+positions already resident in shared prefix pages; chunked admission writes
+pages directly from the ragged unified step, with prefix-cache registration
+deferred until the prompt's KV is fully resident. Recurrent states
+(Mamba/xLSTM) and cross-attention KV are not paged — they stay dense
+per-slot rows.
 
 With ``cfg.kv_bits in (4, 8)`` the pool stores **quantized pages**: uint8
 code pages plus float32 scale/min planes (see :mod:`repro.core.kv_quant`).
@@ -135,14 +139,20 @@ class PagedKVPool:
 
     # -- prompt admission ------------------------------------------------------
 
-    def alloc_prompt(self, slot: int, tokens: np.ndarray) -> int:
+    def alloc_prompt(self, slot: int, tokens: np.ndarray, *, register: bool = True) -> int:
         """Assign pages to ``slot`` for a prompt. Leading full blocks whose
         chained content hash matches a live page are shared instead of
         allocated. Returns the number of leading positions whose KV already
         resides in shared pages (a multiple of ``block_size``) — the caller
         skips writing those. Full blocks are immutable once written, so only
         they are registered in the prefix cache; the partial tail block is
-        always private."""
+        always private.
+
+        ``register=False`` defers prefix-cache publication (see
+        :meth:`register_prompt`): chunked prefill writes page content over
+        several ticks, so registering at admission would let another prompt
+        reuse half-written pages. Reuse of *already registered* pages is
+        unaffected."""
         bs = self.block_size
         s = len(tokens)
         assert self.n_blocks[slot] == 0, "slot must be freed before realloc"
@@ -165,7 +175,7 @@ class PagedKVPool:
                     continue
                 matching = False
             blk = self._take()
-            if key not in self._key_to_block:
+            if register and key not in self._key_to_block:
                 self._key_to_block[key] = blk
                 self._block_key[blk] = key
             self.block_tables[slot, i] = blk
@@ -174,6 +184,22 @@ class PagedKVPool:
             self.block_tables[slot, s // bs] = self._take()
             self.n_blocks[slot] += 1
         return reused
+
+    def register_prompt(self, slot: int, tokens: np.ndarray) -> None:
+        """Publish a slot's leading full blocks in the prefix cache — the
+        deferred half of ``alloc_prompt(..., register=False)``, called once
+        chunked prefill has fully written the prompt's KV. Blocks that were
+        themselves reused (already registered, possibly under another page
+        after copy-on-write) are skipped."""
+        bs = self.block_size
+        toks = np.asarray(tokens)
+        key = _CHAIN_ROOT
+        for i in range(len(toks) // bs):
+            key = (key, toks[i * bs : (i + 1) * bs].tobytes())
+            blk = int(self.block_tables[slot, i])
+            if key not in self._key_to_block and blk not in self._block_key:
+                self._key_to_block[key] = blk
+                self._block_key[blk] = key
 
     # -- decode-time growth / copy-on-write ------------------------------------
 
@@ -264,6 +290,7 @@ class PagedEngine(Engine):
         # is no preemption). Prefix sharing only frees pages beyond this.
         self._reserved = np.zeros(slots, np.int64)
         super().__init__(model, params, slots=slots, max_len=max_len, **kw)
+        self.stats.paged = True
 
     def _make_cache(self) -> Params:
         return self.model.init_cache(
@@ -299,6 +326,20 @@ class PagedEngine(Engine):
 
     def _can_admit(self, req: Request) -> bool:
         return (self.num_blocks - 1) - int(self._reserved.sum()) >= self._pages_needed(req)
+
+    def _on_admit(self, slot: int, req: Request) -> int:
+        """Chunked admission: reserve the slot's worst-case page budget and
+        assign its prompt blocks up front (prefix reuse included), but defer
+        prefix-cache *registration* until the prompt's KV is fully written
+        (:meth:`_on_prefill_done`) so no other prompt can reuse in-flight
+        pages."""
+        self._reserved[slot] = self._pages_needed(req)
+        reused = self.pool.alloc_prompt(slot, req.prompt, register=False)
+        self._sync_pool_stats()
+        return reused
+
+    def _on_prefill_done(self, slot: int, req: Request) -> None:
+        self.pool.register_prompt(slot, req.prompt)
 
     def _write_prefill(self, slot: int, req: Request, pcache: Params) -> None:
         self._reserved[slot] = self._pages_needed(req)
@@ -372,20 +413,30 @@ class PagedEngine(Engine):
         self.pos[slot] = 0
         self._sync_pool_stats()
 
-    # -- decode tick -------------------------------------------------------------
+    # -- unified tick ------------------------------------------------------------
 
-    def _decode_tick(self, tokens: np.ndarray) -> jax.Array:
+    def _pre_tick(self, writes: list[tuple[int, int, int]]) -> None:
+        """Make every position about to be written reachable and private:
+        allocate blocks as rows cross into them (decode growth) and
+        copy-on-write shared blocks (fork divergence; the recomputed last
+        prompt token of a fully prefix-reused prompt)."""
         copies: list[tuple[int, int]] = []
-        for i, r in enumerate(self.active):
-            if r is not None:
-                copies += self.pool.ensure_writable(i, int(self.pos[i]))
+        bs = self.block_size
+        for slot, p0, n in writes:
+            for bi in range(p0 // bs, (p0 + n - 1) // bs + 1):
+                copies += self.pool.ensure_writable(slot, bi * bs)
         if copies:
             self._apply_copies(copies)
-        logits, self.cache = self._decode(
+
+    def _unified_tick(
+        self, tokens: np.ndarray, pos: np.ndarray, seq_lens: np.ndarray
+    ) -> jax.Array:
+        logits, self.cache = self._unified(
             self.params,
             self.cache,
             jnp.asarray(tokens),
-            jnp.asarray(self.pos),
+            jnp.asarray(pos),
+            jnp.asarray(seq_lens),
             jnp.asarray(self.pool.block_tables),
         )
         self._sync_pool_stats()

@@ -1,0 +1,229 @@
+"""Unified-step scheduler: chunked prefill merged with decode (both engines).
+
+Layering (after the PR-6 refactor):
+
+* :class:`UnifiedScheduler` (this module) owns all serving **control flow**:
+  the request queue, the slot table, per-slot positions and prefill
+  progress, lookahead admission, the per-tick token budget, sampling
+  bookkeeping, and request lifecycle (first token, EOS, ``max_new``,
+  capacity cut-off).
+* ``Engine`` / ``PagedEngine`` are thin **backends** behind it: they own the
+  cache buffers and the jitted model calls, and expose a small hook surface
+  (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` / ``_pre_tick`` /
+  ``_unified_tick`` / ``_reset_slot`` / ``_sample``). Dense-cache vs
+  paged-pool allocation is the only real divergence between them.
+
+Two admission modes:
+
+* **Chunked** (``prefill_chunk > 0``, attention-only families): an admitted
+  prompt is split into fixed-budget chunks; each tick merges the pending
+  chunk rows with the live decode rows into **one ragged unified step**
+  (``Model.unified_step``) — multi-token rows write ``[pos, pos+n)`` beside
+  single-token decode rows, so a long prompt never stalls other slots'
+  decode for more than one chunk's worth of compute (the Sarathi/vLLM
+  chunked-prefill design; see ``benchmarks/table18_arrival_serving.py`` for
+  the TTFT win). The first output token is sampled from the final chunk's
+  last-valid-token logits. Because prefill-chunk rows read their own
+  freshly written (quantize-then-dequantize) KV exactly like later decode
+  ticks do, greedy outputs are invariant to the chunk partitioning at every
+  ``kv_bits``.
+* **Whole-prompt** (``prefill_chunk == 0``, and the automatic fallback for
+  families with recurrent decode state): admission runs the full prompt
+  through ``Model.prefill`` in one jitted call before the slot joins the
+  decode batch — the legacy behavior, kept as the baseline the arrival
+  benchmark compares against.
+
+Per-tick token budget: ``max_tick_tokens`` caps the *valid* tokens a
+chunked tick processes. Decode rows are never throttled (each live slot
+always advances one token); prefill chunks fill the remaining budget in
+slot order, shrinking or waiting when it runs out. With no decode rows at
+least one prefill row always gets at least one token, so the scheduler can
+never stall.
+
+Admission is FIFO with bounded lookahead: when the backend rejects the
+queue head (e.g. the paged pool lacks headroom), up to ``admit_lookahead``
+later requests are considered so a small request is not starved behind a
+large one; among admissible requests, submit order is preserved.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serve.engine import Engine, Request
+
+
+class UnifiedScheduler:
+    """Owns the queue, slot table, and per-tick token budget; drives a
+    backend engine through admission, unified ticks, and slot recycling."""
+
+    def __init__(
+        self,
+        backend: "Engine",
+        *,
+        slots: int,
+        prefill_chunk: int = 0,
+        max_tick_tokens: int = 0,
+        admit_lookahead: int = 8,
+    ):
+        if prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = whole-prompt)")
+        if max_tick_tokens < 0:
+            raise ValueError("max_tick_tokens must be >= 0 (0 = unlimited)")
+        if admit_lookahead < 1:
+            raise ValueError("admit_lookahead must be >= 1")
+        self.backend = backend
+        self.slots = slots
+        self.prefill_chunk = prefill_chunk
+        self.max_tick_tokens = max_tick_tokens
+        self.admit_lookahead = admit_lookahead
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)  # next cache write position
+        self._pf_done = np.zeros(slots, np.int32)  # prompt tokens in cache
+
+    @property
+    def chunked(self) -> bool:
+        return self.prefill_chunk > 0
+
+    # -- admission -------------------------------------------------------------
+
+    def submit(self, req: "Request") -> None:
+        self.queue.append(req)
+        stats = self.backend.stats
+        stats.queue_high_water = max(stats.queue_high_water, len(self.queue))
+
+    def _next_admissible(self) -> "Request | None":
+        """Pop the earliest-submitted admissible request, scanning at most
+        ``admit_lookahead`` entries past the head so one oversized request
+        cannot starve the small ones queued behind it (head-of-line fix);
+        FIFO order is preserved among admissible requests."""
+        for j, req in enumerate(self.queue):
+            if j >= self.admit_lookahead:
+                break
+            if self.backend._can_admit(req):
+                del self.queue[j]
+                return req
+        return None
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            while self.active[slot] is None and self.queue:
+                req = self._next_admissible()
+                if req is None:
+                    return
+                if self.chunked:
+                    # prefix-cache hits (paged) skip straight past the shared
+                    # leading positions, but the last prompt token is always
+                    # recomputed so its logits can seed sampling
+                    reused = self.backend._on_admit(slot, req)
+                    start = min(reused, len(req.prompt) - 1)
+                    self._pf_done[slot] = start
+                    self.pos[slot] = start
+                    self.active[slot] = req
+                else:
+                    # whole-prompt admission: one jitted prefill call, slot
+                    # joins the decode batch next tick (legacy baseline)
+                    self.backend._prefill_into(slot, req)
+                    self.pos[slot] = len(req.prompt)
+                    self._pf_done[slot] = len(req.prompt)
+                    if req.done:  # prompt immediately hit EOS / budget
+                        self._free(slot)
+                    else:
+                        self.active[slot] = req
+
+    # -- tick ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit, then run one unified tick. Returns the number of valid
+        tokens processed (decode rows + prefill-chunk tokens) — the unit the
+        arrival benchmark's modeled clock advances by."""
+        self._admit()
+        decode_rows, prefill_rows = [], []
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            (decode_rows if self._pf_done[i] >= len(req.prompt) else prefill_rows).append(i)
+        if not decode_rows and not prefill_rows:
+            return 0
+
+        # decode rows always advance; prefill chunks fill the remaining
+        # token budget in slot order (at least one token when nothing else
+        # would run, so the tick always makes progress)
+        budget = self.max_tick_tokens or 1 << 30
+        budget_left = max(budget - len(decode_rows), 0 if decode_rows else 1)
+        chunks: dict[int, int] = {}
+        for i in prefill_rows:
+            n = min(
+                self.prefill_chunk,
+                len(self.active[i].prompt) - int(self._pf_done[i]),
+                budget_left,
+            )
+            if n > 0:
+                chunks[i] = n
+                budget_left -= n
+
+        # bucket the tick width: 1 for all-decode ticks, the full chunk
+        # budget whenever any prefill row rides along (two jit shapes total)
+        width = self.prefill_chunk if chunks else 1
+        tokens = np.zeros((self.slots, width), np.int32)
+        seq_lens = np.zeros(self.slots, np.int32)
+        for i in decode_rows:
+            tokens[i, 0] = self.active[i].out[-1]
+            seq_lens[i] = 1
+        for i, n in chunks.items():
+            pf = int(self._pf_done[i])
+            tokens[i, :n] = self.active[i].prompt[pf : pf + n]
+            seq_lens[i] = n
+
+        writes = [(i, int(self.pos[i]), int(seq_lens[i])) for i in (*decode_rows, *chunks)]
+        self.backend._pre_tick(writes)
+        logits = self.backend._unified_tick(tokens, self.pos, seq_lens)
+
+        stats = self.backend.stats
+        stats.ticks += 1
+        stats.occupancy_sum += len(decode_rows) + len(chunks)
+        logits_np = np.asarray(logits)
+
+        for i, n in chunks.items():
+            self._pf_done[i] += n
+            self.pos[i] += n
+            req = self.active[i]
+            if self._pf_done[i] >= len(req.prompt):
+                # prompt fully resident: publish it (paged: prefix-cache
+                # registration is deferred to here so an in-flight prompt's
+                # half-written pages can never be reused) and sample the
+                # first output token from the final chunk's logits
+                self.backend._on_prefill_done(i, req)
+                self._emit(i, logits_np[i], capacity=False)
+        for i in decode_rows:
+            self.pos[i] += 1
+            self._emit(i, logits_np[i], capacity=True)
+        return len(decode_rows) + sum(chunks.values())
+
+    def _emit(self, slot: int, logits_row: np.ndarray, *, capacity: bool) -> None:
+        """Sample one token for ``slot`` and run the request lifecycle:
+        EOS / ``max_new`` / (decode only) cache-capacity cut-off."""
+        req = self.active[slot]
+        tok = self.backend._sample(logits_row)
+        req.out.append(tok)
+        self.backend.stats.tokens += 1
+        hit_eos = self.backend.eos_id is not None and tok == self.backend.eos_id
+        full = capacity and self.pos[slot] >= self.backend.max_len - 1
+        if hit_eos or len(req.out) >= req.max_new or full:
+            req.done = True
+            self._free(slot)
+
+    def _free(self, slot: int) -> None:
+        self.active[slot] = None
+        self._pf_done[slot] = 0
+        self.backend._reset_slot(slot)  # also zeroes self.pos[slot]
+
+    def run(self, max_ticks: int = 256) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(self.active):
+                break
+            self.step()

@@ -1,0 +1,291 @@
+"""Unified-step scheduler tests (chunked prefill merged with decode).
+
+The scheduler must be *invisible* in the output: splitting an admitted
+prompt into chunks that ride along with live decode rows may change the
+tick schedule, but never a greedy token — on either engine, at any
+``kv_bits``, under any chunk partitioning, and regardless of what else is
+admitted mid-stream. The control-flow invariants (slot assignment, position
+arithmetic, per-tick token budget) are checked against a spy backend, and
+the lookahead admission fix is pinned with a pool too small for the queue
+head but big enough for the request behind it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.serve.paged_kv import PagedEngine
+from repro.serve.scheduler import UnifiedScheduler
+
+CFG = ModelConfig(
+    name="sched-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=97, loss_chunk=32, dtype=jnp.float32,
+)
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def trained_params():
+    """A briefly trained smoke model (same recipe as test_kv_quant): random
+    init sits at near-tie argmaxes, where the fp-vs-dequantized prefill
+    asymmetry at kv_bits < 16 flips tokens that a real checkpoint holds."""
+    from repro.core.pipeline import pretrain_fp
+    from repro.data import synthetic
+
+    tokens = synthetic.markov_corpus(CFG.vocab, 20_000, seed=0)
+    _, params = pretrain_fp(
+        CFG, synthetic.lm_batches(tokens, 8, 32, steps=80, seed=1), lr=3e-3
+    )
+    return params
+
+
+def _workload(rng: np.random.Generator, lens, max_new):
+    return [
+        Request(rid=i, prompt=rng.integers(0, CFG.vocab, size=s).astype(np.int32),
+                max_new=m)
+        for i, (s, m) in enumerate(zip(lens, max_new))
+    ]
+
+
+def _make(engine_cls, model, params, **kw):
+    if engine_cls is PagedEngine:
+        kw.setdefault("block_size", 8)
+    return engine_cls(model, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Token identity: chunked == whole-prompt, all engines x kv_bits x partitions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine_cls", [Engine, PagedEngine], ids=["dense", "paged"])
+@pytest.mark.parametrize("kv_bits", [16, 8, 4])
+def test_chunked_matches_whole_prompt(trained_params, engine_cls, kv_bits):
+    """Greedy outputs must be byte-identical between legacy whole-prompt
+    admission and chunked scheduling — and invariant to the chunk partition
+    (chunk sizes 1 / 4 / 16, with and without a tick budget) — because chunk
+    rows read back their own freshly written (quantize-then-dequantize) KV
+    exactly like later decode ticks do."""
+    cfg = CFG if kv_bits == 16 else CFG.replace(kv_bits=kv_bits, kv_group=0)
+    model = Model(cfg)
+
+    def serve(**kw):
+        eng = _make(engine_cls, model, trained_params,
+                    slots=2, max_len=MAX_LEN, **kw)
+        reqs = _workload(
+            np.random.default_rng(7), (3, 9, 17, 24, 5, 12), (6, 5, 4, 3, 7, 4)
+        )
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=400)
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs]
+
+    base = serve()  # legacy: prefill_chunk=0
+    for kw in (
+        {"prefill_chunk": 1},
+        {"prefill_chunk": 4},
+        {"prefill_chunk": 16},
+        {"prefill_chunk": 4, "max_tick_tokens": 6},
+    ):
+        assert serve(**kw) == base, (engine_cls.__name__, kv_bits, kw)
+
+
+@pytest.mark.parametrize("engine_cls", [Engine, PagedEngine], ids=["dense", "paged"])
+def test_midstream_admission_does_not_perturb_live_slot(trained_params, engine_cls):
+    """A long prompt chunk-prefilling in one slot must not change a single
+    token of the request already decoding in another slot: ragged rows are
+    independent (per-row positions, masks, KV writes)."""
+    model = Model(CFG)
+    rng = np.random.default_rng(11)
+    short_prompt = rng.integers(0, CFG.vocab, size=6).astype(np.int32)
+    long_prompt = rng.integers(0, CFG.vocab, size=40).astype(np.int32)
+
+    solo = Request(rid=0, prompt=short_prompt, max_new=10)
+    eng = _make(engine_cls, model, trained_params,
+                slots=2, max_len=MAX_LEN, prefill_chunk=8)
+    eng.submit(solo)
+    eng.run(max_ticks=100)
+    assert solo.done
+
+    short = Request(rid=1, prompt=short_prompt, max_new=10)
+    long = Request(rid=2, prompt=long_prompt, max_new=4)
+    eng = _make(engine_cls, model, trained_params,
+                slots=2, max_len=MAX_LEN, prefill_chunk=8)
+    eng.submit(short)
+    eng.step()  # short's prompt (6 <= chunk) fully prefills; decode starts
+    eng.submit(long)  # 40 tokens -> 5 chunk ticks beside short's decode rows
+    eng.run(max_ticks=200)
+    assert short.done and long.done
+    assert short.out == solo.out
+
+
+# ---------------------------------------------------------------------------
+# Control-flow invariants under random arrivals (spy backend)
+# ---------------------------------------------------------------------------
+
+
+class _SpyEngine(Engine):
+    """Records every unified tick's (active rids, pos, seq_lens)."""
+
+    def __init__(self, *args, **kw):
+        self.tick_log = []
+        super().__init__(*args, **kw)
+
+    def _unified_tick(self, tokens, pos, seq_lens):
+        self.tick_log.append((
+            [r.rid if r is not None else None for r in self.active],
+            np.asarray(pos).copy(),
+            np.asarray(seq_lens).copy(),
+        ))
+        return super()._unified_tick(tokens, pos, seq_lens)
+
+
+def test_random_arrival_invariants(model_params):
+    """Seeded random arrivals/lengths; over every recorded tick: a request
+    never occupies two slots, never migrates slots, each row's position
+    advances by exactly its seq_len, writes stay inside max_len, and the
+    per-tick valid-token total respects max_tick_tokens."""
+    model, params = model_params
+    slots, budget = 3, 6
+    eng = _SpyEngine(model, params, slots=slots, max_len=MAX_LEN,
+                     prefill_chunk=5, max_tick_tokens=budget)
+    rng = np.random.default_rng(3)
+    reqs = _workload(rng, rng.integers(2, 21, size=10), rng.integers(2, 9, size=10))
+    pending = list(reqs)
+    for _ in range(500):
+        for _ in range(int(rng.integers(0, 3))):
+            if pending:
+                eng.submit(pending.pop(0))
+        eng.step()
+        if not pending and all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs)
+
+    slot_of: dict[int, int] = {}
+    prev: list[tuple[int, int, int] | None] = [None] * slots  # (rid, pos, n)
+    for rids, pos, seq_lens in eng.tick_log:
+        live = [r for r in rids if r is not None]
+        assert len(live) == len(set(live)), "request in two slots at once"
+        total = int(seq_lens.sum())
+        assert 1 <= total <= budget, f"tick token total {total} breaks budget"
+        for s in range(slots):
+            if rids[s] is None:
+                assert seq_lens[s] == 0
+                continue
+            rid, p, n = rids[s], int(pos[s]), int(seq_lens[s])
+            assert p + n <= MAX_LEN, "row writes past cache capacity"
+            if rid in slot_of:
+                assert slot_of[rid] == s, "request migrated slots mid-flight"
+            slot_of[rid] = s
+            if prev[s] is not None and prev[s][0] == rid:
+                _, pp, pn = prev[s]
+                assert p == pp + pn, "position did not advance by seq_len"
+            prev[s] = (rid, p, n)
+    # every request was actually scheduled
+    assert set(slot_of) == {r.rid for r in reqs}
+
+
+def test_scheduler_arg_validation(model_params):
+    model, params = model_params
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        UnifiedScheduler(None, slots=1, prefill_chunk=-1)
+    with pytest.raises(ValueError, match="max_tick_tokens"):
+        UnifiedScheduler(None, slots=1, max_tick_tokens=-1)
+    with pytest.raises(ValueError, match="admit_lookahead"):
+        UnifiedScheduler(None, slots=1, admit_lookahead=0)
+
+
+# ---------------------------------------------------------------------------
+# Lookahead admission (head-of-line fix)
+# ---------------------------------------------------------------------------
+
+
+def _hol_scenario(model, params, **kw):
+    """Paged pool sized so the queue head (big) cannot be admitted while an
+    earlier request holds pages, but the small request behind it can."""
+    rng = np.random.default_rng(5)
+    eng = PagedEngine(model, params, slots=2, max_len=32, block_size=4,
+                      num_blocks=6, prefill_chunk=4, **kw)
+    first = Request(rid=0, prompt=rng.integers(0, CFG.vocab, size=8).astype(np.int32),
+                    max_new=4)   # 11 tokens -> 3 pages
+    big = Request(rid=1, prompt=rng.integers(0, CFG.vocab, size=16).astype(np.int32),
+                  max_new=4)     # 19 tokens -> 5 pages (needs the whole pool)
+    small = Request(rid=2, prompt=rng.integers(0, CFG.vocab, size=4).astype(np.int32),
+                    max_new=2)   # 5 tokens -> 2 pages (fits beside `first`)
+    eng.submit(first)
+    eng.step()  # first admitted, 3 of 5 usable pages reserved
+    eng.submit(big)
+    eng.submit(small)
+    eng.step()
+    return eng, first, big, small
+
+
+def test_lookahead_admits_past_inadmissible_head(model_params):
+    model, params = model_params
+    eng, first, big, small = _hol_scenario(model, params)
+    # big (queue head) doesn't fit; lookahead admits small into the free slot
+    assert any(r is small for r in eng.active)
+    assert list(eng.queue) == [big]
+    eng.run(max_ticks=200)
+    assert first.done and big.done and small.done  # big admitted once pages free
+
+
+def test_lookahead_bound_of_one_is_strict_fifo(model_params):
+    """admit_lookahead=1 restores the old head-only behavior: small waits
+    behind the inadmissible head (the starvation this PR's fix removes)."""
+    model, params = model_params
+    eng, first, big, small = _hol_scenario(model, params, admit_lookahead=1)
+    assert not any(r is small for r in eng.active)
+    assert list(eng.queue) == [big, small]
+    eng.run(max_ticks=200)
+    assert first.done and big.done and small.done
+
+
+# ---------------------------------------------------------------------------
+# Stats summary / recurrent fallback
+# ---------------------------------------------------------------------------
+
+
+def test_stats_summary_keys_off_engine_type(model_params):
+    """The paged section must appear for a paged engine even when its page
+    counters are all zero (previously keyed off page_high_water truthiness,
+    which dropped the section — and prefix_hits with it — for fresh or
+    fully-prefix-served runs), and never for the dense engine."""
+    model, params = model_params
+    dense = Engine(model, params, slots=1, max_len=32)
+    paged = PagedEngine(model, params, slots=1, max_len=32, block_size=8)
+    assert "prefix_hits" not in dense.stats.summary()
+    assert paged.stats.page_high_water == 0
+    s = paged.stats.summary()
+    assert "pages_in_use=0" in s and "page_high_water=0" in s and "prefix_hits=0" in s
+
+
+def test_recurrent_family_falls_back_to_whole_prompt():
+    """Recurrent mixers scan every input position, so ragged chunk rows are
+    attention-only: the engine silently clamps prefill_chunk to 0 and serves
+    through the legacy whole-prompt path."""
+    cfg = ModelConfig(
+        name="sched-ssm", family="ssm", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=0, vocab=97, slstm_every=2, loss_chunk=32,
+        dtype=jnp.float32,
+    )
+    model = Model(cfg)
+    assert not model.supports_ragged_rows
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, slots=2, max_len=48,
+                 prefill_chunk=8, max_tick_tokens=16)
+    assert eng.sched.prefill_chunk == 0 and not eng.sched.chunked
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32), max_new=4)
+    eng.submit(req)
+    eng.run(max_ticks=50)
+    assert req.done and len(req.out) == 4
