@@ -1,0 +1,187 @@
+"""Validate a Chrome trace-event JSON file produced by ``repro.obs.Tracer``.
+
+Three layers of checks, strictest last:
+
+1. **Schema** — every event has ``name``/``ph``/``pid``/``tid``; ``X``
+   (complete) events carry a non-negative ``dur``; ``i`` (instant) events
+   carry thread scope; ``M`` metadata names each track.
+2. **Nesting** — per track, ``X`` events form properly nested intervals
+   (a span either contains or is disjoint from every other span on its
+   track; no partial overlap, no negative durations). This is what makes
+   the trace render as a sane flame chart in Perfetto.
+3. **Request lifecycle** — for every request track (``req:<rid>``) that
+   reached its ``done`` instant: the ``queued -> admitted -> prefill ->
+   first_token -> decode -> done`` sequence is present and ordered,
+   ``prefill_chunk[i]`` spans sit inside the ``prefill`` span, and every
+   event's ``rid`` arg matches the track it lives on.
+
+Used by the CI bench-smoke job on a live serve run, and imported by
+``tests/test_obs.py`` (call :func:`validate` on an exported document).
+
+    PYTHONPATH=src python -m benchmarks.check_trace trace.json --min-requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# float slack on microsecond timestamps (they come from integer ns / 1e3)
+EPS = 1e-3
+
+LIFECYCLE_SPANS = ("queued", "admitted", "prefill", "decode")
+
+
+def _span_map(events: list[dict]) -> dict[str, dict]:
+    """First event of each name on a track (lifecycle spans are unique)."""
+    out: dict[str, dict] = {}
+    for ev in events:
+        out.setdefault(ev["name"], ev)
+    return out
+
+
+def _check_schema(events: list[dict], errors: list[str]) -> None:
+    for i, ev in enumerate(events):
+        where = f"event[{i}] ({ev.get('name')!r})"
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < -EPS:
+            errors.append(f"{where}: bad ts {ev.get('ts')!r}")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                errors.append(f"{where}: X event with negative/missing dur "
+                              f"({ev.get('dur')!r})")
+        elif ph == "i":
+            if ev.get("s") != "t":
+                errors.append(f"{where}: instant without thread scope")
+        else:
+            errors.append(f"{where}: unknown phase {ph!r}")
+
+
+def _check_nesting(track: str, spans: list[dict], errors: list[str]) -> None:
+    """Spans on one track must be properly nested (contain or disjoint)."""
+    order = sorted(spans, key=lambda e: (e["ts"], -e["dur"]))
+    stack: list[dict] = []
+    for ev in order:
+        s, e = ev["ts"], ev["ts"] + ev["dur"]
+        while stack and s >= stack[-1]["ts"] + stack[-1]["dur"] - EPS:
+            stack.pop()
+        if stack:
+            top_end = stack[-1]["ts"] + stack[-1]["dur"]
+            if e > top_end + EPS:
+                errors.append(
+                    f"track {track!r}: span {ev['name']!r} "
+                    f"[{s:.3f}, {e:.3f}] overlaps {stack[-1]['name']!r} "
+                    f"ending at {top_end:.3f} without nesting"
+                )
+        stack.append(ev)
+
+
+def _contains(outer: dict, inner: dict) -> bool:
+    return (inner["ts"] >= outer["ts"] - EPS and
+            inner["ts"] + inner.get("dur", 0.0)
+            <= outer["ts"] + outer["dur"] + EPS)
+
+
+def _check_lifecycle(track: str, events: list[dict], errors: list[str]) -> bool:
+    """Returns True if this request track completed (has a done instant)."""
+    rid = int(track.split(":", 1)[1])
+    for ev in events:
+        arg_rid = ev.get("args", {}).get("rid")
+        if arg_rid is not None and arg_rid != rid:
+            errors.append(f"track {track!r}: event {ev['name']!r} carries "
+                          f"rid={arg_rid}, expected {rid}")
+    if not any(ev["name"] == "done" and ev["ph"] == "i" for ev in events):
+        return False
+
+    spans = _span_map([ev for ev in events if ev["ph"] == "X"])
+    for name in LIFECYCLE_SPANS:
+        if name not in spans:
+            errors.append(f"track {track!r}: finished request missing "
+                          f"{name!r} span")
+    if any(name not in spans for name in LIFECYCLE_SPANS):
+        return True  # counted as finished, but incomplete — already reported
+
+    queued, admitted = spans["queued"], spans["admitted"]
+    prefill, decode = spans["prefill"], spans["decode"]
+    if queued["ts"] + queued["dur"] > admitted["ts"] + EPS:
+        errors.append(f"track {track!r}: queued span ends after admission")
+    for name, ev in (("prefill", prefill), ("decode", decode)):
+        if not _contains(admitted, ev):
+            errors.append(f"track {track!r}: {name} span escapes admitted span")
+    first_tok = [ev for ev in events
+                 if ev["ph"] == "i" and ev["name"] == "first_token"]
+    if len(first_tok) != 1:
+        errors.append(f"track {track!r}: expected exactly one first_token "
+                      f"instant, got {len(first_tok)}")
+    elif not _contains(admitted, first_tok[0]):
+        errors.append(f"track {track!r}: first_token outside admitted span")
+    elif first_tok[0]["ts"] > decode["ts"] + EPS:
+        errors.append(f"track {track!r}: first_token after decode span start")
+    for ev in events:
+        if ev["ph"] == "X" and ev["name"].startswith("prefill_chunk["):
+            if not _contains(prefill, ev):
+                errors.append(f"track {track!r}: {ev['name']} escapes the "
+                              f"prefill span")
+    return True
+
+
+def validate(doc: dict, min_requests: int = 0) -> list[str]:
+    """Returns a list of human-readable problems (empty = valid)."""
+    errors: list[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing or empty"]
+    _check_schema(events, errors)
+    if errors:
+        return errors  # schema broken: later passes would just throw
+
+    track_names = {
+        (ev["pid"], ev["tid"]): ev["args"]["name"]
+        for ev in events if ev["ph"] == "M" and ev["name"] == "thread_name"
+    }
+    by_track: dict[str, list[dict]] = {}
+    for ev in events:
+        if ev["ph"] == "M":
+            continue
+        track = track_names.get((ev["pid"], ev["tid"]), f"tid:{ev['tid']}")
+        by_track.setdefault(track, []).append(ev)
+
+    finished = 0
+    for track, evs in by_track.items():
+        _check_nesting(track, [e for e in evs if e["ph"] == "X"], errors)
+        if track.startswith("req:"):
+            finished += _check_lifecycle(track, evs, errors)
+    if min_requests and finished < min_requests:
+        errors.append(f"only {finished} finished request lifecycles, "
+                      f"expected >= {min_requests}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--min-requests", type=int, default=0,
+                    help="require at least this many completed request "
+                         "lifecycles (queued..done) in the trace")
+    args = ap.parse_args()
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errors = validate(doc, min_requests=args.min_requests)
+    if errors:
+        for e in errors:
+            print(f"TRACE INVALID: {e}", file=sys.stderr)
+        return 1
+    n_events = sum(1 for e in doc["traceEvents"] if e["ph"] != "M")
+    n_tracks = sum(1 for e in doc["traceEvents"] if e["ph"] == "M")
+    print(f"trace OK: {n_events} events on {n_tracks} tracks "
+          f"({args.trace})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

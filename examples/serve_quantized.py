@@ -19,6 +19,7 @@ from repro.core.pipeline import pretrain_fp, quantize_rtn
 from repro.data import synthetic
 from repro.models.common import ModelConfig
 from repro.models.model import Model
+from repro.obs import Telemetry
 from repro.serve.engine import Engine, Request
 from repro.serve.paged_kv import PagedEngine
 
@@ -39,7 +40,10 @@ def main():
     cfg_q, q_params = quantize_rtn(CFG, fp_params, bits=4, group=32)
     model = Model(cfg_q)
 
-    engine = PagedEngine(model, q_params, slots=4, max_len=128, block_size=BLOCK)
+    obs = Telemetry()  # request-lifecycle tracer + metrics registry
+    engine = PagedEngine(
+        model, q_params, slots=4, max_len=128, block_size=BLOCK, obs=obs
+    )
     rng = np.random.default_rng(0)
     system = tokens[:BLOCK].astype(np.int32)  # shared "system prompt"
 
@@ -85,6 +89,14 @@ def main():
         f"KV pages: peak {engine.stats.page_high_water} of {dense_pages} a dense "
         f"(slots x max_len) cache would pin; {engine.stats.prefix_hits} prompt "
         f"blocks served from the prefix cache"
+    )
+    # the telemetry layer saw the whole run: latency percentiles from the
+    # registry, and every request's lifecycle as a Perfetto-viewable trace
+    print(f"metrics: {obs.metrics.summary()}")
+    obs.tracer.write("serve_trace.json")
+    print(
+        f"trace: wrote {len(obs.tracer)} events to serve_trace.json "
+        f"(open in https://ui.perfetto.dev or chrome://tracing)"
     )
 
     # low-bit KV cache: the same traffic through 8-bit quantized pages

@@ -15,6 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs_mod
 from repro.core.ablate import TRAINABLE_LEAVES
 from repro.core.convert import fp_tree_to_fake
 from repro.models.common import ModelConfig, embed, qspec
@@ -80,14 +81,22 @@ def block_ap(
     cfg_q: ModelConfig,
     calib: dict,
     bcfg: BlockAPConfig = BlockAPConfig(),
+    obs: obs_mod.Telemetry | None = None,
 ) -> tuple[Params, dict]:
     """Returns (params in fake_quant mode with trained (W, s, z), stats).
 
     ``cfg_q`` must be the fake_quant twin of ``model_fp.cfg``
     (same arch, mode='fake_quant', quant_bits set).
     ``calib``: full calibration batch dict, leading axis = #samples.
+
+    Telemetry: one ``phase:block_ap`` span on the shared ``train`` track,
+    one span per reconstructed period (with its final recon loss), and
+    per-period wall time / recon-loss histograms in the registry — the
+    per-phase training-cost numbers the paper reports (Table 8) read
+    straight out of these.
     """
     assert cfg_q.mode == "fake_quant"
+    obs = obs or obs_mod.default()
     spec = qspec(cfg_q)
     variant = cfg_q.fq_variant
     cfg_fp = model_fp.cfg
@@ -143,6 +152,10 @@ def block_ap(
 
         h_cur = h0
         for p_idx in range(n_periods):
+            span = obs.tracer.begin(
+                f"block_ap[{stack_key}][{p_idx}]", track="train",
+                stack=stack_key, period=p_idx,
+            )
             slot = _tree_idx(q_layers, p_idx)
             train_p, frozen_p = partition(slot, path_mask(slot, pred))
             opt_state = opt.init(train_p)
@@ -156,11 +169,19 @@ def block_ap(
                     )
             slot = merge(train_p, frozen_p)
             q_layers = _tree_set(q_layers, p_idx, slot)
-            stats["recon_loss"].append(float(last))
+            recon = float(last)
+            stats["recon_loss"].append(recon)
             h_cur = forward_full(slot, h_cur, kv_src)
+            obs.tracer.end(span, recon_loss=recon)
+            obs.metrics.histogram("block_ap.period_ms", "ms").observe(
+                (span.t1 - span.t0) / 1e6 if span.t1 else 0.0
+            )
+            obs.metrics.histogram("block_ap.recon_loss").observe(recon)
         out_params[stack_key] = q_layers
         return h_cur
 
+    phase_span = obs.tracer.begin("phase:block_ap", track="train",
+                                  bits=cfg_q.quant_bits)
     for stack_key, layout, h0, kv_src, causal in _stacks(model_fp, fp_params, calib):
         enc_out = train_stack(stack_key, layout, h0, kv_src, causal)
 
@@ -186,4 +207,5 @@ def block_ap(
         for stack_key, layout, hh, kv, causal in dec_gen():
             train_stack(stack_key, layout, hh, kv, causal)
 
+    obs.tracer.end(phase_span)
     return out_params, stats

@@ -8,11 +8,13 @@ repro/train wraps this step)."""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs_mod
 from repro.models.model import Model
 from repro.optim import adamw, apply_updates, merge, partition, path_mask
 
@@ -78,17 +80,35 @@ def make_step(model: Model, ecfg: E2EQPConfig):
     return split, opt, step
 
 
-def run_e2e_qp(model: Model, params: Params, batches, ecfg: E2EQPConfig):
-    """Single-host convenience loop (examples/tests). Returns (params, log)."""
+def run_e2e_qp(model: Model, params: Params, batches, ecfg: E2EQPConfig,
+               obs: obs_mod.Telemetry | None = None):
+    """Single-host convenience loop (examples/tests). Returns (params, log).
+
+    Telemetry mirrors the production trainer's: a ``phase:e2e_qp`` span on
+    the ``train`` track, per-step spans, and step-time metrics with the
+    compile-dominated first step routed to ``train.compile_step_ms`` so the
+    ``train.step_ms`` histogram is steady-state only."""
+    obs = obs or obs_mod.default()
     params = prepare_params(params, ecfg)
     split, opt, step = make_step(model, ecfg)
     train_p, frozen_p = split(params)
     opt_state = opt.init(train_p)
     jstep = jax.jit(step)
     log = []
+    phase_span = obs.tracer.begin("phase:e2e_qp", track="train", steps=ecfg.steps)
     for i, batch in enumerate(batches):
         if i >= ecfg.steps:
             break
+        span = obs.tracer.begin("step", track="train", step=i, compile=(i == 0))
+        t0 = time.time()
         train_p, opt_state, metrics = jstep(train_p, frozen_p, opt_state, batch)
-        log.append({k: float(v) for k, v in metrics.items()})
+        entry = {k: float(v) for k, v in metrics.items()}
+        dt_ms = (time.time() - t0) * 1e3
+        obs.tracer.end(span, loss=entry.get("loss"))
+        if i == 0:
+            obs.metrics.gauge("train.compile_step_ms", "ms").set(dt_ms)
+        else:
+            obs.metrics.histogram("train.step_ms", "ms").observe(dt_ms)
+        log.append(entry)
+    obs.tracer.end(phase_span)
     return merge(train_p, frozen_p), log

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model import Model
+from repro.obs import Telemetry
 from repro.serve.engine import Engine, Request
 from repro.serve.paged_kv import PagedEngine
 
@@ -60,6 +61,13 @@ def main():
     ap.add_argument("--paged-attn-impl", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="paged decode attention: Pallas kernel vs pure-JAX ref")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request-lifecycle trace here as Chrome "
+                         "trace-event JSON (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable span recording entirely (overhead measurement)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print the metrics-registry summary every N ticks (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -73,10 +81,12 @@ def main():
     )
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    obs = Telemetry(tracing=not args.no_trace)
     kw = dict(
         slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
         prefill_chunk=args.prefill_chunk, max_tick_tokens=args.max_tick_tokens,
+        obs=obs,
     )
     if args.paged:
         engine = PagedEngine(model, params, block_size=args.block_size, **kw)
@@ -93,13 +103,25 @@ def main():
         engine.submit(r)
 
     t0 = time.time()
-    engine.run(max_ticks=1000)
+    if args.metrics_every > 0:
+        for tick in range(1000):
+            if not engine.sched.queue and not any(engine.sched.active):
+                break
+            engine.step()
+            if (tick + 1) % args.metrics_every == 0:
+                print(f"[tick {tick + 1}] {obs.metrics.summary()}")
+    else:
+        engine.run(max_ticks=1000)
     dt = time.time() - t0
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU interpret)")
     print(f"stats: {engine.stats.summary()}")
+    print(f"metrics: {obs.metrics.summary()}")
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"trace: wrote {len(obs.tracer)} events to {args.trace_out}")
     print(f"kv cache bytes: {engine.kv_cache_bytes():,} (kv_bits={cfg.kv_bits})")
     if engine.state_bytes():
         print(f"recurrent state bytes: {engine.state_bytes():,} "

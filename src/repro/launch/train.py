@@ -18,6 +18,7 @@ from repro.data import synthetic
 from repro.data.pipeline import PrefetchLoader
 from repro.distributed.sharding import axis_rules, param_shardings
 from repro.models.model import Model
+from repro.obs import Telemetry
 from repro.train.trainer import TrainConfig, Trainer
 
 
@@ -35,6 +36,11 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--trace-out", default=None,
+                    help="write phase/step spans here as Chrome trace-event "
+                         "JSON (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print the metrics-registry summary every N steps (0 = off)")
     args = ap.parse_args()
 
     overrides = {} if args.mode == "quantized" else {"mode": "fp", "quant_bits": 0}
@@ -64,8 +70,9 @@ def main():
         grad_compression=args.grad_compression,
         trainable="qparams" if cfg.mode == "quantized" else "all",
         ckpt_dir=args.ckpt_dir,
+        metrics_every=args.metrics_every,
     )
-    trainer = Trainer(model, tcfg, mesh=mesh)
+    trainer = Trainer(model, tcfg, mesh=mesh, obs=Telemetry())
     if mesh is not None:
         with mesh, axis_rules(mesh):
             params, log = trainer.fit(params, loader)
@@ -74,6 +81,10 @@ def main():
     losses = [e["loss"] for e in log if "loss" in e]
     print(f"first loss={losses[0]:.4f}  last loss={losses[-1]:.4f}  steps={len(losses)}")
     print("straggler events:", len(trainer.watchdog.events))
+    print(trainer.steady_state_report())
+    if args.trace_out:
+        trainer.obs.tracer.write(args.trace_out)
+        print(f"trace: wrote {len(trainer.obs.tracer)} events to {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ from repro.core.kv_quant import kv_dequantize, kv_quantize
 from repro.distributed.sharding import lc
 from repro.kernels import interpret_default
 from repro.models.common import ModelConfig, apply_rope, linear, linear_init
+from repro.obs import profiler
 
 NEG_INF = -1e30
 
@@ -86,6 +87,7 @@ def _flash(q, k, v, cfg):
     return of.reshape(b, h, sq, hd).swapaxes(1, 2).reshape(b, sq, kh, g, hd)
 
 
+@profiler.scoped("attn.paged_decode")
 def _paged_attention(q, pages, block_tables, lengths, cfg):
     """Dispatch paged decode attention over a page-pool cache node: Pallas
     kernel on TPU (or when forced via ``cfg.paged_attn_impl='pallas'``,
@@ -122,6 +124,7 @@ def _paged_attention(q, pages, block_tables, lengths, cfg):
     )
 
 
+@profiler.scoped("attn.dense_decode")
 def _dense_decode(q, rows, lengths, cfg):
     """Dispatch single-token dense decode attention over per-slot cache rows:
     Pallas streaming-softmax kernel on TPU (or when forced via

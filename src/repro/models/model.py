@@ -30,6 +30,7 @@ from repro.models.common import (
     rmsnorm_init,
     uniform_init,
 )
+from repro.obs import profiler
 
 Params = dict[str, Any]
 
@@ -364,22 +365,23 @@ class Model:
     def prefill(self, params: Params, batch: dict) -> tuple[jax.Array, Params]:
         """Process the full prompt; returns (last-token logits, cache)."""
         cfg = self.cfg
-        h = embed(params["embed"], batch["tokens"], cfg.dtype)
-        kv_src = None
-        if cfg.family == "encdec":
-            kv_src = self._encode(params, batch)
-            h, cache, _ = _run_stack(
-                params["dec"], self.dec_layout, cfg, h,
-                causal=True, kv_src=kv_src, make_cache=True,
-            )
-        else:
-            kv_src = self._kv_src(params, batch)
-            h, cache, _ = _run_stack(
-                params["layers"], self.layout, cfg, h,
-                causal=True, kv_src=kv_src, make_cache=True,
-            )
-        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-        logits = logits_head(params["embed"], h[:, -1:, :], cfg)
+        with profiler.xla_scope("prefill"):
+            h = embed(params["embed"], batch["tokens"], cfg.dtype)
+            kv_src = None
+            if cfg.family == "encdec":
+                kv_src = self._encode(params, batch)
+                h, cache, _ = _run_stack(
+                    params["dec"], self.dec_layout, cfg, h,
+                    causal=True, kv_src=kv_src, make_cache=True,
+                )
+            else:
+                kv_src = self._kv_src(params, batch)
+                h, cache, _ = _run_stack(
+                    params["layers"], self.layout, cfg, h,
+                    causal=True, kv_src=kv_src, make_cache=True,
+                )
+            h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = logits_head(params["embed"], h[:, -1:, :], cfg)
         return logits, cache
 
     def decode_step(
@@ -475,13 +477,16 @@ class Model:
                 params, cache, tokens, pos, block_tables
             )
             return logits[:, 0], new_cache
-        seq_lens = jnp.asarray(seq_lens, jnp.int32)
-        h, new_cache = self._decode_stack(
-            params, cache, tokens, pos, block_tables, seq_lens
-        )
-        last = jnp.clip(seq_lens - 1, 0, sq - 1)  # (B,) last valid index
-        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
-        logits = logits_head(params["embed"], h_last, self.cfg)
+        # name the emitted HLO so XLA profiles line up with the tracer's
+        # tick spans (see repro.obs.profiler; free outside profiling)
+        with profiler.xla_scope("unified_step"):
+            seq_lens = jnp.asarray(seq_lens, jnp.int32)
+            h, new_cache = self._decode_stack(
+                params, cache, tokens, pos, block_tables, seq_lens
+            )
+            last = jnp.clip(seq_lens - 1, 0, sq - 1)  # (B,) last valid index
+            h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+            logits = logits_head(params["embed"], h_last, self.cfg)
         return logits[:, 0], new_cache
 
     # -- cache construction ---------------------------------------------------

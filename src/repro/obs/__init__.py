@@ -1,0 +1,41 @@
+"""``repro.obs`` — zero-dependency telemetry for the serving + training
+stack: span tracing (:mod:`repro.obs.trace`), percentile metrics
+(:mod:`repro.obs.metrics`), and optional ``jax.profiler`` hooks
+(:mod:`repro.obs.profiler`).
+
+A :class:`Telemetry` bundles one tracer and one metrics registry; every
+engine owns a private one (so per-engine counters stay comparable in
+tests), while the training pipeline phases share the process-wide
+:func:`default` instance so ``Block-AP -> E2E-QP`` spans land in a single
+exportable trace.
+"""
+from __future__ import annotations
+
+from repro.obs import profiler
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Span, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Span", "Tracer", "Telemetry", "default", "profiler",
+]
+
+
+class Telemetry:
+    """One tracer + one metrics registry, wired together."""
+
+    def __init__(self, *, tracing: bool = True, trace_capacity: int = 65536,
+                 clock=None):
+        self.tracer = Tracer(capacity=trace_capacity, enabled=tracing, clock=clock)
+        self.metrics = MetricsRegistry()
+
+
+_default: Telemetry | None = None
+
+
+def default() -> Telemetry:
+    """Process-wide telemetry (training phases, pipeline scripts)."""
+    global _default
+    if _default is None:
+        _default = Telemetry()
+    return _default

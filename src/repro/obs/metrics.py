@@ -1,0 +1,189 @@
+"""Metrics registry: counters, gauges, and log-bucketed histograms.
+
+Zero-dependency (stdlib only) and cheap enough to leave on in the serving
+hot loop: a counter increment is one float add, a histogram observation is
+one ``math.log`` plus a dict increment. Percentiles are derived from the
+bucket counts alone — no samples are stored — with a *bounded relative
+error* set by the bucket growth factor: buckets are geometric with ratio
+``GROWTH = 2**(1/32)`` and a percentile is reported at its bucket's
+geometric midpoint, so the estimate is within ``sqrt(GROWTH) - 1`` (~1.1%)
+of the true sample quantile (``Histogram.REL_ERROR``; pinned by
+``tests/test_obs.py`` against known distributions).
+
+The registry is the single source of truth for serving and training
+counters: ``EngineStats`` (``repro/serve/engine.py``) is a read-only view
+over it, and ``benchmarks/table18_arrival_serving.py`` derives its gated
+TTFT percentiles from registry histograms instead of hand-kept lists.
+"""
+from __future__ import annotations
+
+import math
+
+
+class Counter:
+    """Monotonic counter (e.g. ``serve.tokens``)."""
+
+    __slots__ = ("name", "unit", "value")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-value gauge with a high-water mark (e.g. ``serve.queue_depth``)."""
+
+    __slots__ = ("name", "unit", "value", "high")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.value = 0.0
+        self.high = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+        if v > self.high:
+            self.high = v
+
+
+class Histogram:
+    """Log-bucketed histogram: p50/p90/p99 without storing samples.
+
+    Positive observations land in bucket ``floor(log(v) / log(GROWTH))``;
+    zero and negative values are counted in a dedicated zero bucket (they
+    have no log). ``percentile(q)`` walks the cumulative counts to the
+    ``ceil(q/100 * n)``-th observation and returns that bucket's geometric
+    midpoint clamped to the exact observed [min, max], so the relative
+    error against the empirical quantile is at most ``REL_ERROR``.
+    """
+
+    GROWTH = 2.0 ** (1.0 / 32.0)  # ~2.2% per bucket
+    _LN_G = math.log(GROWTH)
+    REL_ERROR = math.sqrt(GROWTH) - 1.0  # ~1.1% worst-case midpoint error
+
+    __slots__ = ("name", "unit", "count", "sum", "min", "max", "_zero", "_buckets")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._zero = 0  # observations <= 0
+        self._buckets: dict[int, int] = {}
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        if v <= 0.0:
+            self._zero += 1
+            return
+        idx = math.floor(math.log(v) / self._LN_G)
+        self._buckets[idx] = self._buckets.get(idx, 0) + 1
+
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Empirical q-th percentile estimate (inverted-CDF rank); 0.0 when
+        the histogram is empty."""
+        if self.count == 0:
+            return 0.0
+        rank = max(1, math.ceil(q / 100.0 * self.count))
+        if rank <= self._zero:
+            # zero bucket holds the exact value only when all its entries
+            # are identical; report the observed min (<= 0) as the estimate
+            return min(self.min, 0.0)
+        seen = self._zero
+        for idx in sorted(self._buckets):
+            seen += self._buckets[idx]
+            if seen >= rank:
+                mid = self.GROWTH ** (idx + 0.5)  # geometric bucket midpoint
+                return min(max(mid, self.min), self.max)
+        return self.max  # unreachable unless float drift; clamp anyway
+
+    def summary(self) -> str:
+        if self.count == 0:
+            return "n=0"
+        return (
+            f"n={self.count} mean={self.mean():.3g} p50={self.percentile(50):.3g}"
+            f" p90={self.percentile(90):.3g} p99={self.percentile(99):.3g}"
+            f" max={self.max:.3g}"
+        )
+
+
+class MetricsRegistry:
+    """Name -> metric map with get-or-create accessors. Names are dotted
+    (``serve.ttft_ms``); the unit suffix convention (``_ms``, ``_bytes``)
+    is documented in the README's observability section."""
+
+    def __init__(self):
+        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+
+    def _get(self, cls, name: str, unit: str):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name, unit)
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric '{name}' already registered as {type(m).__name__}, "
+                f"not {cls.__name__}"
+            )
+        return m
+
+    def counter(self, name: str, unit: str = "") -> Counter:
+        return self._get(Counter, name, unit)
+
+    def gauge(self, name: str, unit: str = "") -> Gauge:
+        return self._get(Gauge, name, unit)
+
+    def histogram(self, name: str, unit: str = "") -> Histogram:
+        return self._get(Histogram, name, unit)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __iter__(self):
+        return iter(self._metrics.values())
+
+    def snapshot(self) -> dict[str, dict]:
+        """JSON-friendly dump of every metric's current state."""
+        out: dict[str, dict] = {}
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Counter):
+                out[name] = {"type": "counter", "value": m.value}
+            elif isinstance(m, Gauge):
+                out[name] = {"type": "gauge", "value": m.value, "high": m.high}
+            else:
+                out[name] = {
+                    "type": "histogram", "count": m.count, "mean": m.mean(),
+                    "p50": m.percentile(50), "p90": m.percentile(90),
+                    "p99": m.percentile(99),
+                    "min": m.min if m.count else 0.0,
+                    "max": m.max if m.count else 0.0,
+                }
+        return out
+
+    def summary(self) -> str:
+        """Multi-line human-readable dump (the ``--metrics-every`` output)."""
+        lines = []
+        for name, m in sorted(self._metrics.items()):
+            unit = f" {m.unit}" if m.unit else ""
+            if isinstance(m, Counter):
+                lines.append(f"{name}={m.value:g}{unit}")
+            elif isinstance(m, Gauge):
+                lines.append(f"{name}={m.value:g} (high={m.high:g}){unit}")
+            else:
+                lines.append(f"{name}: {m.summary()}{unit}")
+        return "\n".join(lines)

@@ -1,0 +1,72 @@
+"""Optional ``jax.profiler`` integration — all helpers no-op cleanly when
+the profiler is unavailable or inapplicable (the CPU/interpret CI leg).
+
+Two kinds of annotation, matching where the code runs:
+
+* :func:`annotate` — a **host-side** ``jax.profiler.TraceAnnotation``
+  around a jitted call (engine tick, prefill, train step). Visible on the
+  Python thread track of an XLA profile, so device timelines line up with
+  the tracer's own spans.
+* :func:`xla_scope` — ``jax.named_scope`` for code **inside** a traced
+  function (``Model.unified_step``, the Pallas kernel dispatch sites in
+  ``repro/models/attention.py``). Names the emitted HLO, so kernel time in
+  an XLA profile is attributable to our span taxonomy. Free at runtime
+  (trace-time only).
+
+:func:`trace` wraps ``jax.profiler.trace(logdir)``: pass a falsy logdir and
+it is a no-op, so call sites can thread an optional ``--profile-dir`` flag
+straight through.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+try:  # pragma: no cover - exercised implicitly by every import
+    import jax as _jax
+    import jax.profiler as _jax_profiler
+
+    _HAVE_PROFILER = hasattr(_jax_profiler, "TraceAnnotation")
+except Exception:  # jax missing/broken: telemetry must still import
+    _jax = None
+    _jax_profiler = None
+    _HAVE_PROFILER = False
+
+
+def annotate(name: str):
+    """Host-side profiler annotation context (no-op without a profiler)."""
+    if _HAVE_PROFILER:
+        return _jax_profiler.TraceAnnotation(name)
+    return contextlib.nullcontext()
+
+
+def xla_scope(name: str):
+    """Name the HLO emitted inside a jitted region (no-op without jax)."""
+    if _jax is not None:
+        return _jax.named_scope(name)
+    return contextlib.nullcontext()
+
+
+def scoped(name: str):
+    """Decorator form of :func:`xla_scope` (kernel dispatch sites)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with xla_scope(name):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
+
+
+@contextlib.contextmanager
+def trace(logdir: str | None):
+    """Capture an XLA profile into ``logdir`` for the duration of the
+    context; no-op when ``logdir`` is falsy or the profiler is missing."""
+    if not logdir or not _HAVE_PROFILER:
+        yield
+        return
+    with _jax_profiler.trace(str(logdir)):
+        yield

@@ -1,0 +1,150 @@
+"""Low-overhead span tracer with Chrome trace-event export.
+
+Design constraints (this sits on the serving tick path):
+
+* **monotonic clock** — ``time.perf_counter_ns`` (never wall time, so spans
+  are immune to clock steps and durations are exact integer nanoseconds);
+* **bounded ring buffer** — finished events land in a ``deque(maxlen=...)``
+  so a long-lived engine can trace forever at O(capacity) memory (oldest
+  events are dropped, newest kept — the tail you want when something went
+  slow *just now*);
+* **nestable spans with attributes** — begin/end pairs (for lifecycles
+  spanning many ticks) or a ``with tracer.span(...)`` context manager (for
+  lexical scopes). Spans carry a ``track`` (one per request, plus the
+  scheduler/trainer tracks) and a free-form ``args`` dict;
+* **disabled mode is near-free** — ``Tracer(enabled=False)`` short-circuits
+  every call before touching the clock (the overhead table in the README
+  measures on-vs-off).
+
+``export()`` emits Chrome trace-event JSON (``{"traceEvents": [...]}``):
+complete ``"X"`` events for spans, ``"i"`` instants for point events, and
+``"M"`` thread-name metadata so Perfetto / ``chrome://tracing`` shows one
+labeled row per track. ``benchmarks/check_trace.py`` validates the schema
+and the per-request lifecycle invariants.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from typing import Any
+
+_PID = 0  # single-process traces; one pid keeps Perfetto grouping flat
+
+
+class Span:
+    """An open (or finished) span. Returned by :meth:`Tracer.begin`; hand it
+    back to :meth:`Tracer.end`. ``None`` end time means still open."""
+
+    __slots__ = ("name", "track", "t0", "t1", "args")
+
+    def __init__(self, name: str, track: str, t0: int, args: dict[str, Any]):
+        self.name = name
+        self.track = track
+        self.t0 = t0
+        self.t1: int | None = None
+        self.args = args
+
+
+_NULL_SPAN = Span("", "", 0, {})
+
+
+class Tracer:
+    def __init__(self, capacity: int = 65536, enabled: bool = True, clock=None):
+        self.enabled = enabled
+        self._clock = clock or time.perf_counter_ns
+        # finished events only; open spans are owned by their callers
+        self._events: deque[tuple] = deque(maxlen=capacity)
+        self._tracks: dict[str, int] = {}  # track name -> tid (stable order)
+
+    def now(self) -> int:
+        """Monotonic nanoseconds (the tracer's own clock, for callers that
+        want to compute durations consistent with span timestamps)."""
+        return self._clock()
+
+    def _tid(self, track: str) -> int:
+        tid = self._tracks.get(track)
+        if tid is None:
+            tid = self._tracks[track] = len(self._tracks)
+        return tid
+
+    # -- spans -----------------------------------------------------------------
+
+    def begin(self, name: str, track: str = "main", **args: Any) -> Span:
+        if not self.enabled:
+            return _NULL_SPAN
+        return Span(name, track, self._clock(), args)
+
+    def end(self, span: Span, **args: Any) -> None:
+        if not self.enabled or span is _NULL_SPAN:
+            return
+        span.t1 = self._clock()
+        if args:
+            span.args.update(args)
+        self._events.append(("X", span.name, span.track, span.t0, span.t1, span.args))
+
+    def span(self, name: str, track: str = "main", **args: Any):
+        """Context manager for a lexically scoped span."""
+        return _SpanCtx(self, name, track, args)
+
+    def instant(self, name: str, track: str = "main", **args: Any) -> None:
+        if not self.enabled:
+            return
+        t = self._clock()
+        self._events.append(("i", name, track, t, t, args))
+
+    # -- export ----------------------------------------------------------------
+
+    def export(self) -> dict:
+        """Chrome trace-event document (JSON-serializable dict). Timestamps
+        are microseconds relative to the earliest retained event, so traces
+        open at t=0 in Perfetto."""
+        events = list(self._events)
+        t_base = min((e[3] for e in events), default=0)
+        out: list[dict] = []
+        for ph, name, track, t0, t1, args in events:
+            ev = {
+                "ph": ph, "name": name, "pid": _PID, "tid": self._tid(track),
+                "ts": (t0 - t_base) / 1e3,
+            }
+            if ph == "X":
+                ev["dur"] = (t1 - t0) / 1e3
+            else:
+                ev["s"] = "t"  # instant scope: thread
+            if args:
+                ev["args"] = dict(args)
+            out.append(ev)
+        # render order: by timestamp, longest-duration first on ties so a
+        # parent span precedes the children it encloses; track-name
+        # metadata (tids assigned above) goes first
+        out.sort(key=lambda e: (e["ts"], -e.get("dur", 0.0)))
+        meta = [
+            {"ph": "M", "name": "thread_name", "pid": _PID, "tid": tid,
+             "args": {"name": track}}
+            for track, tid in self._tracks.items()
+        ]
+        return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.export(), f)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+
+class _SpanCtx:
+    __slots__ = ("_tracer", "_span", "_name", "_track", "_args")
+
+    def __init__(self, tracer: Tracer, name: str, track: str, args: dict):
+        self._tracer = tracer
+        self._name = name
+        self._track = track
+        self._args = args
+
+    def __enter__(self) -> Span:
+        self._span = self._tracer.begin(self._name, self._track, **self._args)
+        return self._span
+
+    def __exit__(self, *exc) -> None:
+        self._tracer.end(self._span)

@@ -9,9 +9,18 @@ request lifecycle — lives in
 cache, the paged subclass swaps in the page pool, and both expose the same
 small hook surface (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` /
 ``_on_prefill_done`` / ``_pre_tick`` / ``_unified_tick`` / ``_reset_slot``
-/ ``_sample``) plus the jitted model calls. ``submit`` / ``step`` / ``run``
-and the ``queue`` / ``active`` / ``pos`` views delegate to the scheduler,
-so engine users are unchanged.
+/ ``_sample`` / ``_sync_stats``) plus the jitted model calls. ``submit`` /
+``step`` / ``run`` and the ``queue`` / ``active`` / ``pos`` views delegate
+to the scheduler, so engine users are unchanged.
+
+Telemetry: each engine owns a :class:`repro.obs.Telemetry` (pass ``obs=``
+to share or disable one). All serving counters live in its metrics
+registry and are written by the scheduler (plus the backend's own pool
+gauges via ``_sync_stats``); :class:`EngineStats` is a read-only view over
+that registry kept for the pre-telemetry API (``engine.stats.summary()``
+and field access keep working). The scheduler also emits the per-request
+lifecycle trace; export it with ``engine.obs.tracer.write(path)`` (the
+``--trace-out`` flag on ``repro.launch.serve``).
 
 Continuous batching with **ragged per-slot positions**: a fixed pool of B
 cache slots; finished sequences free their slot (cache state is reset to its
@@ -71,6 +80,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import Telemetry, profiler
 from repro.serve.scheduler import UnifiedScheduler
 
 Params = dict[str, Any]
@@ -97,9 +107,13 @@ class Request:
     done: bool = False
 
 
-@dataclasses.dataclass
 class EngineStats:
-    """Lightweight serving counters, updated on every submit/prefill/tick.
+    """Read-only view over the engine's metrics registry, kept so the
+    pre-telemetry API (``engine.stats.<field>`` / ``summary()``) keeps
+    working. All updates go through the registry — written by the
+    scheduler's tick/admission hooks for the shared counters and by the
+    paged backend's ``_sync_stats`` for the pool gauges — so the fields here
+    can never drift between engines.
 
     ``paged`` marks the engine type: the paged engine additionally tracks
     its page pool — ``pages_in_use`` / ``page_high_water`` count physical KV
@@ -108,14 +122,40 @@ class EngineStats:
     type, not counter truthiness, so a paged run that never allocated a page
     (or served everything from prefix hits) still prints as paged."""
 
-    ticks: int = 0
-    tokens: int = 0  # total generated tokens (prefill sample + decode ticks)
-    occupancy_sum: int = 0  # sum over ticks of live rows (avg = /ticks)
-    queue_high_water: int = 0
-    paged: bool = False
-    pages_in_use: int = 0
-    page_high_water: int = 0
-    prefix_hits: int = 0
+    def __init__(self, registry):
+        self._reg = registry
+        self.paged = False
+
+    @property
+    def ticks(self) -> int:
+        # every tick observes its occupancy exactly once
+        return self._reg.histogram("serve.tick_occupancy").count
+
+    @property
+    def tokens(self) -> int:
+        """Total generated tokens (prefill sample + decode ticks)."""
+        return int(self._reg.counter("serve.tokens").value)
+
+    @property
+    def occupancy_sum(self) -> int:
+        """Sum over ticks of live rows (avg = /ticks)."""
+        return int(self._reg.histogram("serve.tick_occupancy").sum)
+
+    @property
+    def queue_high_water(self) -> int:
+        return int(self._reg.gauge("serve.queue_depth").high)
+
+    @property
+    def pages_in_use(self) -> int:
+        return int(self._reg.gauge("serve.pages_in_use").value)
+
+    @property
+    def page_high_water(self) -> int:
+        return int(self._reg.gauge("serve.pages_in_use").high)
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self._reg.gauge("serve.prefix_hits").value)
 
     def summary(self) -> str:
         avg_occ = self.occupancy_sum / max(self.ticks, 1)
@@ -146,6 +186,7 @@ class Engine:
         prefill_chunk: int = 0,
         max_tick_tokens: int = 0,
         admit_lookahead: int = 8,
+        obs: Telemetry | None = None,
     ):
         assert model.cfg.is_causal_lm, "serving engine targets decoder LMs"
         self.model = model
@@ -157,7 +198,8 @@ class Engine:
         self.cache = self._make_cache()
         # one-slot template of the init cache state, written back on free
         self._fresh = self._make_fresh()
-        self.stats = EngineStats()
+        self.obs = obs or Telemetry()
+        self.stats = EngineStats(self.obs.metrics)
         self._rng = np.random.default_rng(seed)
         self._unified = jax.jit(model.unified_step)
         self._prefill = jax.jit(model.prefill)
@@ -224,18 +266,17 @@ class Engine:
         """Chunked-prefill-completion hook (paged: publish the prompt's now
         fully written blocks in the prefix cache)."""
 
-    def _prefill_into(self, slot: int, req: Request) -> None:
+    def _prefill_into(self, slot: int, req: Request) -> np.ndarray:
         """Whole-prompt admission: one jitted full-sequence prefill, its
-        cache copied into the slot, first token sampled from the last-token
-        logits (the legacy path, and the recurrent-family fallback)."""
+        cache copied into the slot (the legacy path, and the
+        recurrent-family fallback). Returns the last-token logits row —
+        sampling and the request lifecycle belong to the scheduler, so no
+        counter is touched here."""
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-        logits, pcache = self._prefill(self.params, batch)
+        with profiler.annotate("serve.prefill"):
+            logits, pcache = self._prefill(self.params, batch)
         self._write_prefill(slot, req, pcache)
-        tok = self._sample(np.asarray(logits[0, -1]))
-        req.out.append(tok)
-        self.stats.tokens += 1
-        if (self.eos_id is not None and tok == self.eos_id) or len(req.out) >= req.max_new:
-            req.done = True
+        return np.asarray(logits[0, -1])
 
     def _write_prefill(self, slot: int, req: Request, pcache: Params) -> None:
         """Copy a batch-1 prefill cache into slot `slot` of the pool cache."""
@@ -340,14 +381,19 @@ class Engine:
     ) -> jax.Array:
         """Run one jitted unified step over the whole pool; returns each
         row's last-valid-token logits, shape ``(slots, vocab)``."""
-        logits, self.cache = self._unified(
-            self.params,
-            self.cache,
-            jnp.asarray(tokens),
-            jnp.asarray(pos),
-            jnp.asarray(seq_lens),
-        )
+        with profiler.annotate("serve.unified_step"):
+            logits, self.cache = self._unified(
+                self.params,
+                self.cache,
+                jnp.asarray(tokens),
+                jnp.asarray(pos),
+                jnp.asarray(seq_lens),
+            )
         return logits
+
+    def _sync_stats(self) -> None:
+        """Backend-gauge refresh hook, driven by the scheduler's admission
+        and tick paths (the paged engine publishes its pool gauges here)."""
 
     def _admit(self) -> None:
         self.sched._admit()

@@ -101,6 +101,7 @@ class PagedKVPool:
         self._key_to_block: dict[tuple, int] = {}
         self._block_key: dict[int, tuple] = {}
         self.prefix_hits = 0
+        self.prompt_blocks = 0  # full prompt blocks considered (hits + allocs)
         self.cow_copies = 0
 
     @property
@@ -158,6 +159,7 @@ class PagedKVPool:
         assert self.n_blocks[slot] == 0, "slot must be freed before realloc"
         assert -(-s // bs) <= self.max_blocks
         toks = np.asarray(tokens)
+        self.prompt_blocks += s // bs
         # chained content key: block i's key embeds the bytes of blocks 0..i
         key = _CHAIN_ROOT
         reused = 0
@@ -334,9 +336,7 @@ class PagedEngine(Engine):
         (:meth:`_on_prefill_done`) so no other prompt can reuse in-flight
         pages."""
         self._reserved[slot] = self._pages_needed(req)
-        reused = self.pool.alloc_prompt(slot, req.prompt, register=False)
-        self._sync_pool_stats()
-        return reused
+        return self.pool.alloc_prompt(slot, req.prompt, register=False)
 
     def _on_prefill_done(self, slot: int, req: Request) -> None:
         self.pool.register_prompt(slot, req.prompt)
@@ -382,7 +382,6 @@ class PagedEngine(Engine):
             return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
 
         self.cache = _map_cache(self.cache, pcache, on_pages, on_dense)
-        self._sync_pool_stats()
 
     def _reset_slot(self, slot: int) -> None:
         """Free the slot's pages and reset its dense (non-paged) cache rows.
@@ -411,7 +410,6 @@ class PagedEngine(Engine):
 
         self.cache = _map_cache(self.cache, self._fresh, on_pages, on_dense)
         self.pos[slot] = 0
-        self._sync_pool_stats()
 
     # -- unified tick ------------------------------------------------------------
 
@@ -439,7 +437,6 @@ class PagedEngine(Engine):
             jnp.asarray(seq_lens),
             jnp.asarray(self.pool.block_tables),
         )
-        self._sync_pool_stats()
         return logits
 
     def _apply_copies(self, copies: list[tuple[int, int]]) -> None:
@@ -453,12 +450,19 @@ class PagedEngine(Engine):
             lambda leaf, _: leaf,
         )
 
-    def _sync_pool_stats(self) -> None:
-        self.stats.pages_in_use = self.pool.pages_in_use
-        self.stats.page_high_water = max(
-            self.stats.page_high_water, self.pool.pages_in_use
+    def _sync_stats(self) -> None:
+        """Publish the pool gauges into the metrics registry. Called by the
+        scheduler after admission, after ``_pre_tick`` block allocation
+        (where ``pages_in_use`` peaks, feeding the gauge's high-water mark),
+        and at the end of every tick — the backend never writes the shared
+        scheduler counters, only its own gauges."""
+        met = self.obs.metrics
+        met.gauge("serve.pages_in_use", "pages").set(self.pool.pages_in_use)
+        met.gauge("serve.prefix_hits", "blocks").set(self.pool.prefix_hits)
+        met.gauge("serve.prefix_hit_rate").set(
+            self.pool.prefix_hits / max(self.pool.prompt_blocks, 1)
         )
-        self.stats.prefix_hits = self.pool.prefix_hits
+        met.gauge("serve.cow_copies").set(self.pool.cow_copies)
 
     # -- accounting --------------------------------------------------------------
 

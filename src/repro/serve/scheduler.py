@@ -10,8 +10,9 @@ Layering (after the PR-6 refactor):
 * ``Engine`` / ``PagedEngine`` are thin **backends** behind it: they own the
   cache buffers and the jitted model calls, and expose a small hook surface
   (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` / ``_pre_tick`` /
-  ``_unified_tick`` / ``_reset_slot`` / ``_sample``). Dense-cache vs
-  paged-pool allocation is the only real divergence between them.
+  ``_unified_tick`` / ``_reset_slot`` / ``_sample`` / ``_sync_stats``).
+  Dense-cache vs paged-pool allocation is the only real divergence between
+  them.
 
 Two admission modes:
 
@@ -44,6 +45,16 @@ Admission is FIFO with bounded lookahead: when the backend rejects the
 queue head (e.g. the paged pool lacks headroom), up to ``admit_lookahead``
 later requests are considered so a small request is not starved behind a
 large one; among admissible requests, submit order is preserved.
+
+**Telemetry** (``repro.obs``): the scheduler is the single writer of every
+serving counter and the emitter of the per-request lifecycle trace —
+``queued -> admitted -> prefill_chunk[i] -> first_token -> decode -> done``
+on one trace track per request, plus per-tick ``tick``/``unified_step``
+spans on the scheduler track. Centralizing the updates here (rather than in
+backend-specific paths) is what keeps both engines' stats drift-free by
+construction; the backends only refresh their own gauges when the scheduler
+calls ``_sync_stats``. Metric names and units are documented in the README
+observability section.
 """
 from __future__ import annotations
 
@@ -84,17 +95,29 @@ class UnifiedScheduler:
         self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)  # next cache write position
         self._pf_done = np.zeros(slots, np.int32)  # prompt tokens in cache
+        # per-request lifecycle state: open spans + timing, keyed by rid
+        self._lt: dict[int, dict] = {}
 
     @property
     def chunked(self) -> bool:
         return self.prefill_chunk > 0
 
+    @property
+    def obs(self):
+        return self.backend.obs
+
     # -- admission -------------------------------------------------------------
 
     def submit(self, req: "Request") -> None:
         self.queue.append(req)
-        stats = self.backend.stats
-        stats.queue_high_water = max(stats.queue_high_water, len(self.queue))
+        tr = self.obs.tracer
+        self._lt[req.rid] = {
+            "queued": tr.begin("queued", track=f"req:{req.rid}", rid=req.rid,
+                               prompt_len=len(req.prompt)),
+            "t_submit": tr.now(),
+            "t_last_tok": 0,
+        }
+        self.obs.metrics.gauge("serve.queue_depth").set(len(self.queue))
 
     def _next_admissible(self) -> "Request | None":
         """Pop the earliest-submitted admissible request, scanning at most
@@ -110,11 +133,23 @@ class UnifiedScheduler:
         return None
 
     def _admit(self) -> None:
+        admitted = 0
         for slot in range(self.slots):
             while self.active[slot] is None and self.queue:
                 req = self._next_admissible()
                 if req is None:
+                    if admitted:
+                        self._post_admit(admitted)
                     return
+                admitted += 1
+                tr = self.obs.tracer
+                lt = self._lt[req.rid]
+                tr.end(lt.pop("queued"), slot=slot)
+                track = f"req:{req.rid}"
+                lt["admitted"] = tr.begin("admitted", track=track, rid=req.rid,
+                                          slot=slot)
+                lt["prefill"] = tr.begin("prefill", track=track, rid=req.rid,
+                                         tokens=len(req.prompt))
                 if self.chunked:
                     # prefix-cache hits (paged) skip straight past the shared
                     # leading positions, but the last prompt token is always
@@ -126,14 +161,23 @@ class UnifiedScheduler:
                     self.active[slot] = req
                 else:
                     # whole-prompt admission: one jitted prefill call, slot
-                    # joins the decode batch next tick (legacy baseline)
-                    self.backend._prefill_into(slot, req)
+                    # joins the decode batch next tick (legacy baseline).
+                    # Sampling and all lifecycle/counter updates happen HERE,
+                    # not in the backend, so dense and paged engines can
+                    # never drift on the shared counters.
+                    logits_row = self.backend._prefill_into(slot, req)
                     self.pos[slot] = len(req.prompt)
                     self._pf_done[slot] = len(req.prompt)
-                    if req.done:  # prompt immediately hit EOS / budget
-                        self._free(slot)
-                    else:
-                        self.active[slot] = req
+                    self.active[slot] = req
+                    tr.end(lt.pop("prefill"))
+                    self._emit(slot, logits_row, capacity=False)
+        if admitted:
+            self._post_admit(admitted)
+
+    def _post_admit(self, admitted: int) -> None:
+        self.obs.metrics.counter("serve.admitted").inc(admitted)
+        self.obs.metrics.gauge("serve.queue_depth").set(len(self.queue))
+        self.backend._sync_stats()
 
     # -- tick ------------------------------------------------------------------
 
@@ -174,21 +218,41 @@ class UnifiedScheduler:
         for i in decode_rows:
             tokens[i, 0] = self.active[i].out[-1]
             seq_lens[i] = 1
-        for i, n in chunks.items():
+        for i in chunks:
             pf = int(self._pf_done[i])
-            tokens[i, :n] = self.active[i].prompt[pf : pf + n]
-            seq_lens[i] = n
+            tokens[i, : chunks[i]] = self.active[i].prompt[pf : pf + chunks[i]]
+            seq_lens[i] = chunks[i]
+
+        tr = self.obs.tracer
+        met = self.obs.metrics
+        tick_span = tr.begin(
+            "tick", track="sched",
+            decode_rows=len(decode_rows), prefill_rows=len(chunks),
+            prefill_tokens=sum(chunks.values()), width=width,
+        )
+        chunk_spans = {
+            i: tr.begin(
+                f"prefill_chunk[{int(self._pf_done[i]) // max(self.prefill_chunk, 1)}]",
+                track=f"req:{self.active[i].rid}", rid=self.active[i].rid,
+                tokens=n, pos=int(self.pos[i]),
+            )
+            for i, n in chunks.items()
+        }
 
         writes = [(i, int(self.pos[i]), int(seq_lens[i])) for i in (*decode_rows, *chunks)]
         self.backend._pre_tick(writes)
-        logits = self.backend._unified_tick(tokens, self.pos, seq_lens)
-
-        stats = self.backend.stats
-        stats.ticks += 1
-        stats.occupancy_sum += len(decode_rows) + len(chunks)
+        self.backend._sync_stats()  # page gauges peak right after allocation
+        with tr.span("unified_step", track="sched"):
+            logits = self.backend._unified_tick(tokens, self.pos, seq_lens)
         logits_np = np.asarray(logits)
 
+        met.histogram("serve.tick_occupancy", "rows").observe(
+            len(decode_rows) + len(chunks)
+        )
+        met.counter("serve.prompt_tokens").inc(sum(chunks.values()))
+
         for i, n in chunks.items():
+            tr.end(chunk_spans[i])
             self._pf_done[i] += n
             self.pos[i] += n
             req = self.active[i]
@@ -198,19 +262,43 @@ class UnifiedScheduler:
                 # half-written pages can never be reused) and sample the
                 # first output token from the final chunk's logits
                 self.backend._on_prefill_done(i, req)
+                tr.end(self._lt[req.rid].pop("prefill"))
                 self._emit(i, logits_np[i], capacity=False)
         for i in decode_rows:
             self.pos[i] += 1
             self._emit(i, logits_np[i], capacity=True)
+        tr.end(tick_span)
+        met.histogram("serve.tick_ms", "ms").observe(
+            (tick_span.t1 - tick_span.t0) / 1e6 if tick_span.t1 else 0.0
+        )
+        self.backend._sync_stats()
         return len(decode_rows) + sum(chunks.values())
 
     def _emit(self, slot: int, logits_row: np.ndarray, *, capacity: bool) -> None:
         """Sample one token for ``slot`` and run the request lifecycle:
-        EOS / ``max_new`` / (decode only) cache-capacity cut-off."""
+        EOS / ``max_new`` / (decode only) cache-capacity cut-off. The single
+        place a generated token is counted, for both admission modes and
+        both engines."""
         req = self.active[slot]
         tok = self.backend._sample(logits_row)
         req.out.append(tok)
-        self.backend.stats.tokens += 1
+        tr = self.obs.tracer
+        met = self.obs.metrics
+        met.counter("serve.tokens").inc()
+        now = tr.now()
+        lt = self._lt[req.rid]
+        if len(req.out) == 1:
+            track = f"req:{req.rid}"
+            tr.instant("first_token", track=track, rid=req.rid)
+            lt["decode"] = tr.begin("decode", track=track, rid=req.rid)
+            met.histogram("serve.ttft_ms", "ms").observe(
+                (now - lt["t_submit"]) / 1e6
+            )
+        else:
+            met.histogram("serve.tbt_ms", "ms").observe(
+                (now - lt["t_last_tok"]) / 1e6
+            )
+        lt["t_last_tok"] = now
         hit_eos = self.backend.eos_id is not None and tok == self.backend.eos_id
         full = capacity and self.pos[slot] >= self.backend.max_len - 1
         if hit_eos or len(req.out) >= req.max_new or full:
@@ -218,9 +306,19 @@ class UnifiedScheduler:
             self._free(slot)
 
     def _free(self, slot: int) -> None:
+        req = self.active[slot]
         self.active[slot] = None
         self._pf_done[slot] = 0
         self.backend._reset_slot(slot)  # also zeroes self.pos[slot]
+        lt = self._lt.pop(req.rid, None)
+        if lt is not None:
+            tr = self.obs.tracer
+            track = f"req:{req.rid}"
+            if "decode" in lt:
+                tr.end(lt["decode"], tokens=len(req.out))
+            tr.end(lt["admitted"], tokens=len(req.out))
+            tr.instant("done", track=track, rid=req.rid)
+        self.obs.metrics.counter("serve.finished").inc()
 
     def run(self, max_ticks: int = 256) -> None:
         for _ in range(max_ticks):

@@ -5,7 +5,14 @@
 * optional int8+error-feedback gradient compression (cross-pod hop),
 * NaN watchdog with automatic restore from the last good checkpoint,
 * async checkpointing every K steps (latest-k retention),
-* straggler watchdog (deadline policy; see repro/train/elastic.py).
+* straggler watchdog (deadline policy; see repro/train/elastic.py),
+* telemetry (``repro.obs``): a phase span per fit, a span per step, and
+  step-time / loss / token-throughput metrics in the registry. The first
+  step is tagged ``compile=True`` (its wall time is dominated by XLA
+  compilation) and lands in the ``train.compile_step_ms`` gauge instead of
+  the ``train.step_ms`` histogram, so steady-state step time and
+  throughput are reported unskewed — the returned log keeps the raw ``dt``
+  for backward compatibility but carries the same ``compile`` tag.
 """
 from __future__ import annotations
 
@@ -16,7 +23,9 @@ from typing import Any, Callable, Iterable
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs_mod
 from repro.models.model import Model
+from repro.obs import profiler
 from repro.optim import adamw, apply_updates, merge, partition, path_mask
 from repro.optim.compress import compressed_allreduce, init_error_state
 from repro.train.checkpoint import CheckpointManager
@@ -38,6 +47,7 @@ class TrainConfig:
     ckpt_every: int = 50
     keep_ckpts: int = 3
     straggler_factor: float = 3.0
+    metrics_every: int = 0  # print the metrics-registry summary every N steps
 
 
 def _trainable_pred(kind: str) -> Callable[[str], bool]:
@@ -47,10 +57,14 @@ def _trainable_pred(kind: str) -> Callable[[str], bool]:
 
 
 class Trainer:
-    def __init__(self, model: Model, tcfg: TrainConfig, mesh=None):
+    def __init__(self, model: Model, tcfg: TrainConfig, mesh=None,
+                 obs: obs_mod.Telemetry | None = None):
         self.model = model
         self.tcfg = tcfg
         self.mesh = mesh
+        # training phases share the process-wide telemetry by default so
+        # Block-AP and E2E-QP spans land in one exportable trace
+        self.obs = obs or obs_mod.default()
         self.opt = adamw(
             tcfg.lr, clip_norm=tcfg.clip_norm, weight_decay=tcfg.weight_decay
         )
@@ -127,19 +141,41 @@ class Trainer:
         # a fresh copy and add donate_argnums=(0, 2, 3) for in-place updates.
         step_fn = jax.jit(self.make_step())
 
+        tracer, met = self.obs.tracer, self.obs.metrics
+        phase = "e2e_qp" if tcfg.trainable == "qparams" else "fp_train"
+        phase_span = tracer.begin(f"phase:{phase}", track="train",
+                                  steps=tcfg.steps)
         log: list[dict] = []
         good = (train_p, opt_state, 0)  # last known-good snapshot marker
+        compiled = False  # first executed step pays the jit compile
         for i, batch in enumerate(batches):
             if i >= tcfg.steps:
                 break
+            compile_step = not compiled
+            compiled = True
+            span = tracer.begin("step", track="train", step=i,
+                                compile=compile_step)
             t0 = time.time()
-            train_p, opt_state, err_state, metrics = step_fn(
-                train_p, frozen_p, opt_state, err_state, batch
-            )
-            loss = float(metrics["loss"])
-            self.watchdog.observe(time.time() - t0, step=i)
+            with profiler.annotate(f"train.step[{i}]"):
+                train_p, opt_state, err_state, metrics = step_fn(
+                    train_p, frozen_p, opt_state, err_state, batch
+                )
+                loss = float(metrics["loss"])  # blocks on the device result
+            dt = time.time() - t0
+            tracer.end(span, loss=loss)
+            self.watchdog.observe(dt, step=i)
+            # steady-state step time is reported separately from the
+            # compile-dominated first step so throughput is not skewed
+            if compile_step:
+                met.gauge("train.compile_step_ms", "ms").set(dt * 1e3)
+            else:
+                met.histogram("train.step_ms", "ms").observe(dt * 1e3)
+                met.counter("train.steady_tokens").inc(batch["tokens"].size)
+            met.counter("train.steps").inc()
+            met.counter("train.tokens").inc(batch["tokens"].size)
             if not jnp.isfinite(loss):
                 # fault tolerance: restore last good state and skip the batch
+                met.counter("train.nan_rollbacks").inc()
                 if self.ckpt is not None and self.ckpt.latest_step() is not None:
                     self.ckpt.wait()
                     restored, at = self.ckpt.restore({"p": good[0], "o": good[1]})
@@ -149,10 +185,32 @@ class Trainer:
                     train_p, opt_state = good[0], good[1]
                     log.append({"step": i, "event": "nan_rollback"})
                 continue
-            log.append({"step": i, "loss": loss, "dt": time.time() - t0})
+            met.gauge("train.loss").set(loss)
+            entry = {"step": i, "loss": loss, "dt": dt}
+            if compile_step:
+                entry["compile"] = True
+            log.append(entry)
+            if tcfg.metrics_every and (i + 1) % tcfg.metrics_every == 0:
+                print(f"-- metrics @ step {i + 1} --\n{met.summary()}", flush=True)
             if self.ckpt is not None and (i + 1) % tcfg.ckpt_every == 0:
                 self.ckpt.save(i + 1, {"p": train_p, "o": opt_state})
                 good = (train_p, opt_state, i + 1)
+        tracer.end(phase_span)
         if self.ckpt is not None:
             self.ckpt.wait()
         return merge(train_p, frozen_p), log
+
+    def steady_state_report(self) -> str:
+        """One-line steady-state summary: compile step vs steady step time
+        and token throughput, from the registry (excludes step 0)."""
+        met = self.obs.metrics
+        hist = met.histogram("train.step_ms", "ms")
+        compile_ms = met.gauge("train.compile_step_ms", "ms").value
+        if hist.count == 0:
+            return f"compile_step={compile_ms:.0f}ms steady_steps=0"
+        tok_s = met.counter("train.steady_tokens").value / (hist.sum / 1e3)
+        return (
+            f"compile_step={compile_ms:.0f}ms steady_step p50={hist.percentile(50):.1f}ms "
+            f"p99={hist.percentile(99):.1f}ms throughput={tok_s:.0f} tok/s "
+            f"({hist.count} steady steps)"
+        )

@@ -252,6 +252,61 @@ def test_lookahead_bound_of_one_is_strict_fifo(model_params):
 
 
 # ---------------------------------------------------------------------------
+# Centralized counters (the scheduler is the single writer)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_counters_match_spy_ground_truth(model_params):
+    """Shared EngineStats counters are maintained by the scheduler's
+    admission/tick hooks, never by backend code — so they must equal the
+    ground truth recomputed from the spy backend's raw tick log."""
+    model, params = model_params
+    eng = _SpyEngine(model, params, slots=3, max_len=MAX_LEN,
+                     prefill_chunk=5, max_tick_tokens=8)
+    rng = np.random.default_rng(9)
+    reqs = _workload(rng, rng.integers(2, 21, size=8), rng.integers(2, 9, size=8))
+    pending = list(reqs)
+    for _ in range(500):
+        for _ in range(int(rng.integers(0, 3))):
+            if pending:
+                eng.submit(pending.pop(0))
+        eng.step()
+        if not pending and all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs)
+    assert eng.stats.ticks == len(eng.tick_log)
+    occ = sum(int((seq_lens > 0).sum()) for _, _, seq_lens in eng.tick_log)
+    assert eng.stats.occupancy_sum == occ
+    assert eng.stats.tokens == sum(len(r.out) for r in reqs)
+
+
+@pytest.mark.parametrize("chunked", [False, True], ids=["legacy", "chunked"])
+def test_dense_and_paged_counters_do_not_drift(model_params, chunked):
+    """Same workload through both engines (ample paged pool): the shared
+    counters must be identical, because only the scheduler writes them — an
+    engine backend can no longer forget or double-count one. (No EOS, so
+    the schedule depends only on request lengths, not sampled tokens.)"""
+    model, params = model_params
+
+    def serve(engine_cls):
+        kw = dict(slots=2, max_len=MAX_LEN)
+        if chunked:
+            kw.update(prefill_chunk=4, max_tick_tokens=8)
+        eng = _make(engine_cls, model, params, **kw)
+        reqs = _workload(
+            np.random.default_rng(13), (3, 9, 17, 5, 12), (6, 5, 4, 7, 4)
+        )
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=400)
+        assert all(r.done for r in reqs)
+        st = eng.stats
+        return (st.ticks, st.tokens, st.occupancy_sum, st.queue_high_water)
+
+    assert serve(Engine) == serve(PagedEngine)
+
+
+# ---------------------------------------------------------------------------
 # Stats summary / recurrent fallback
 # ---------------------------------------------------------------------------
 
