@@ -9,14 +9,23 @@ Three layers of checks, strictest last:
    (a span either contains or is disjoint from every other span on its
    track; no partial overlap, no negative durations). This is what makes
    the trace render as a sane flame chart in Perfetto.
-3. **Request lifecycle** — for every request track (``req:<rid>``) that
-   reached its ``done`` instant: the ``queued -> admitted -> prefill ->
-   first_token -> decode -> done`` sequence is present and ordered,
-   ``prefill_chunk[i]`` spans sit inside the ``prefill`` span, and every
-   event's ``rid`` arg matches the track it lives on.
+3. **Request lifecycle** — for every request track (``req:<rid>``): exactly
+   one terminal instant (``done`` / ``cancelled`` / ``deadline_missed`` /
+   ``rejected``). A ``done`` track must show the full ``queued -> admitted
+   -> prefill -> first_token -> decode -> done`` progression — possibly
+   *multiple times* under recompute preemption: each ``preempted`` instant
+   re-enters ``queued``, so #admitted == #queued and #preempted ==
+   #admitted - 1, every ``prefill`` / ``decode`` / ``first_token`` /
+   ``preempted`` event nests inside one of the ``admitted`` spans (exactly
+   one ``first_token`` overall — recompute resumption must not re-emit it),
+   ``prefill_chunk[i]`` spans sit inside a ``prefill`` span, and every
+   event's ``rid`` arg matches the track it lives on. Overload terminals
+   (``cancelled`` / ``deadline_missed`` / ``rejected``) only need their
+   spans closed and nested — a request may be torn down at any stage.
 
-Used by the CI bench-smoke job on a live serve run, and imported by
-``tests/test_obs.py`` (call :func:`validate` on an exported document).
+Used by the CI bench-smoke job on live serve runs (including the overload
+run with preemption faults), and imported by ``tests/test_obs.py`` (call
+:func:`validate` on an exported document).
 
     PYTHONPATH=src python -m benchmarks.check_trace trace.json --min-requests 4
 """
@@ -29,15 +38,7 @@ import sys
 # float slack on microsecond timestamps (they come from integer ns / 1e3)
 EPS = 1e-3
 
-LIFECYCLE_SPANS = ("queued", "admitted", "prefill", "decode")
-
-
-def _span_map(events: list[dict]) -> dict[str, dict]:
-    """First event of each name on a track (lifecycle spans are unique)."""
-    out: dict[str, dict] = {}
-    for ev in events:
-        out.setdefault(ev["name"], ev)
-    return out
+TERMINALS = ("done", "cancelled", "deadline_missed", "rejected")
 
 
 def _check_schema(events: list[dict], errors: list[str]) -> None:
@@ -87,6 +88,10 @@ def _contains(outer: dict, inner: dict) -> bool:
             <= outer["ts"] + outer["dur"] + EPS)
 
 
+def _in_some(spans: list[dict], ev: dict) -> bool:
+    return any(_contains(s, ev) for s in spans)
+
+
 def _check_lifecycle(track: str, events: list[dict], errors: list[str]) -> bool:
     """Returns True if this request track completed (has a done instant)."""
     rid = int(track.split(":", 1)[1])
@@ -95,37 +100,67 @@ def _check_lifecycle(track: str, events: list[dict], errors: list[str]) -> bool:
         if arg_rid is not None and arg_rid != rid:
             errors.append(f"track {track!r}: event {ev['name']!r} carries "
                           f"rid={arg_rid}, expected {rid}")
-    if not any(ev["name"] == "done" and ev["ph"] == "i" for ev in events):
+    terminals = [ev for ev in events
+                 if ev["ph"] == "i" and ev["name"] in TERMINALS]
+    if len(terminals) != 1:
+        errors.append(f"track {track!r}: expected exactly one terminal "
+                      f"instant, got {[e['name'] for e in terminals]}")
+        return False
+    if terminals[0]["name"] != "done":
+        # overload terminal: teardown may happen at any lifecycle stage, so
+        # only the generic schema/nesting checks (already run) apply
         return False
 
-    spans = _span_map([ev for ev in events if ev["ph"] == "X"])
-    for name in LIFECYCLE_SPANS:
+    spans: dict[str, list[dict]] = {}
+    for ev in events:
+        if ev["ph"] == "X":
+            spans.setdefault(ev["name"], []).append(ev)
+    for name in ("queued", "admitted", "prefill", "decode"):
         if name not in spans:
             errors.append(f"track {track!r}: finished request missing "
                           f"{name!r} span")
-    if any(name not in spans for name in LIFECYCLE_SPANS):
-        return True  # counted as finished, but incomplete — already reported
+            return True  # counted as finished — already reported
 
-    queued, admitted = spans["queued"], spans["admitted"]
-    prefill, decode = spans["prefill"], spans["decode"]
-    if queued["ts"] + queued["dur"] > admitted["ts"] + EPS:
-        errors.append(f"track {track!r}: queued span ends after admission")
-    for name, ev in (("prefill", prefill), ("decode", decode)):
-        if not _contains(admitted, ev):
-            errors.append(f"track {track!r}: {name} span escapes admitted span")
+    queued = sorted(spans["queued"], key=lambda e: e["ts"])
+    admitted = sorted(spans["admitted"], key=lambda e: e["ts"])
+    preempted = [ev for ev in events
+                 if ev["ph"] == "i"
+                 and ev["name"] in ("preempted", "admit_aborted")]
+    # recompute preemption (and an aborted admission's storage failure)
+    # re-enters queued: one admission per queued epoch, one preempted /
+    # admit_aborted instant between consecutive admissions
+    if len(queued) != len(admitted):
+        errors.append(f"track {track!r}: {len(queued)} queued spans vs "
+                      f"{len(admitted)} admitted spans")
+    if len(preempted) != len(admitted) - 1:
+        errors.append(f"track {track!r}: {len(preempted)} preempted/aborted "
+                      f"instants for {len(admitted)} admissions (expected "
+                      f"{len(admitted) - 1})")
+    for q, a in zip(queued, admitted):
+        if q["ts"] + q["dur"] > a["ts"] + EPS:
+            errors.append(f"track {track!r}: queued span ends after its "
+                          f"admission at {a['ts']:.3f}")
+    for name in ("prefill", "decode"):
+        for ev in spans[name]:
+            if not _in_some(admitted, ev):
+                errors.append(f"track {track!r}: {name} span at "
+                              f"{ev['ts']:.3f} escapes every admitted span")
+    for ev in preempted:
+        if not _in_some(admitted, ev):
+            errors.append(f"track {track!r}: preempted instant at "
+                          f"{ev['ts']:.3f} outside every admitted span")
     first_tok = [ev for ev in events
                  if ev["ph"] == "i" and ev["name"] == "first_token"]
     if len(first_tok) != 1:
         errors.append(f"track {track!r}: expected exactly one first_token "
                       f"instant, got {len(first_tok)}")
-    elif not _contains(admitted, first_tok[0]):
-        errors.append(f"track {track!r}: first_token outside admitted span")
-    elif first_tok[0]["ts"] > decode["ts"] + EPS:
-        errors.append(f"track {track!r}: first_token after decode span start")
+    elif not _in_some(admitted, first_tok[0]):
+        errors.append(f"track {track!r}: first_token outside every admitted "
+                      f"span")
     for ev in events:
         if ev["ph"] == "X" and ev["name"].startswith("prefill_chunk["):
-            if not _contains(prefill, ev):
-                errors.append(f"track {track!r}: {ev['name']} escapes the "
+            if not _in_some(spans["prefill"], ev):
+                errors.append(f"track {track!r}: {ev['name']} escapes every "
                               f"prefill span")
     return True
 

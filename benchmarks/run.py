@@ -32,6 +32,7 @@ from benchmarks import (
     table16_dense_decode,
     table17_state_quant,
     table18_arrival_serving,
+    table19_overload,
     roofline_table,
 )
 
@@ -50,6 +51,7 @@ ALL = {
     "table16": table16_dense_decode.main,
     "table17": table17_state_quant.main,
     "table18": table18_arrival_serving.main,
+    "table19": table19_overload.main,
     "roofline": roofline_table.main,
 }
 

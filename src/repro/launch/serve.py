@@ -32,6 +32,29 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV engine (block tables)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged KV pool size in pages (0 = worst-case sizing: "
+                         "slots * ceil(max_len/block) + 1; smaller pools are "
+                         "legal — the scheduler preempts+recomputes on "
+                         "exhaustion)")
+    ap.add_argument("--admission", default="reserve",
+                    choices=("reserve", "optimistic"),
+                    help="paged admission policy: reserve the worst-case page "
+                         "count up front, or admit on current-need and rely "
+                         "on preemption under pressure")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on the waiting queue; submits past it are shed "
+                         "per --shed-policy (0 = unbounded)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=("reject", "shed-oldest-queued"),
+                    help="what to shed when the bounded queue is full: the "
+                         "new arrival, or the oldest queued request")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="per-request first-token deadline on the scheduler's "
+                         "modeled clock; missed => deadline_missed terminal "
+                         "state, pages freed immediately")
+    ap.add_argument("--total-deadline-ms", type=float, default=None,
+                    help="per-request completion deadline on the modeled clock")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prefill chunk size for the unified scheduler: each "
                          "tick merges up to this many prompt tokens per "
@@ -86,10 +109,13 @@ def main():
         slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
         prefill_chunk=args.prefill_chunk, max_tick_tokens=args.max_tick_tokens,
+        max_queue=args.max_queue, shed_policy=args.shed_policy,
         obs=obs,
     )
     if args.paged:
-        engine = PagedEngine(model, params, block_size=args.block_size, **kw)
+        engine = PagedEngine(
+            model, params, block_size=args.block_size,
+            num_blocks=args.num_blocks or None, admission=args.admission, **kw)
     else:
         engine = Engine(model, params, **kw)
 
@@ -98,7 +124,9 @@ def main():
     for rid in range(args.requests):
         plen = int(rng.integers(4, 24))  # ragged prompt lengths
         prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
-        r = Request(rid=rid, prompt=prompt, max_new=args.max_new)
+        r = Request(rid=rid, prompt=prompt, max_new=args.max_new,
+                    ttft_deadline_ms=args.ttft_deadline_ms,
+                    total_deadline_ms=args.total_deadline_ms)
         reqs.append(r)
         engine.submit(r)
 
@@ -113,10 +141,15 @@ def main():
     else:
         engine.run(max_ticks=1000)
     dt = time.time() - t0
-    done = sum(r.done for r in reqs)
+    done = sum(r.status == "done" for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU interpret)")
+    shed = {s: n for s in ("rejected", "deadline_missed", "cancelled")
+            if (n := sum(r.status == s for r in reqs))}
+    if shed or engine.stats.preempted:
+        print(f"overload: preemptions={engine.stats.preempted} "
+              + " ".join(f"{k}={v}" for k, v in shed.items()))
     print(f"stats: {engine.stats.summary()}")
     print(f"metrics: {obs.metrics.summary()}")
     if args.trace_out:

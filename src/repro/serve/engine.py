@@ -101,10 +101,22 @@ def _is_kv_node(node: dict) -> bool:
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray  # (S,) int32
+    prompt: np.ndarray  # (S,) int32; grows under recompute preemption
     max_new: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # overload knobs/state (PR 8): deadlines run on the scheduler's modeled
+    # clock; ``status`` ends at one of done / cancelled / deadline_missed /
+    # rejected (``done=True`` for all terminals, so drive loops need no change)
+    ttft_deadline_ms: float | None = None
+    total_deadline_ms: float | None = None
+    status: str = "new"
+    preemptions: int = 0
+    prompt0: np.ndarray = None  # original prompt, before recompute growth
+
+    def __post_init__(self):
+        if self.prompt0 is None:
+            self.prompt0 = self.prompt
 
 
 class EngineStats:
@@ -157,6 +169,26 @@ class EngineStats:
     def prefix_hits(self) -> int:
         return int(self._reg.gauge("serve.prefix_hits").value)
 
+    @property
+    def preempted(self) -> int:
+        return int(self._reg.counter("serve.preempted").value)
+
+    @property
+    def cancelled(self) -> int:
+        return int(self._reg.counter("serve.cancelled").value)
+
+    @property
+    def deadline_missed(self) -> int:
+        return int(self._reg.counter("serve.deadline_missed").value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._reg.counter("serve.rejected").value)
+
+    @property
+    def finished(self) -> int:
+        return int(self._reg.counter("serve.finished").value)
+
     def summary(self) -> str:
         avg_occ = self.occupancy_sum / max(self.ticks, 1)
         s = (
@@ -169,6 +201,12 @@ class EngineStats:
                 f" page_high_water={self.page_high_water}"
                 f" prefix_hits={self.prefix_hits}"
             )
+        # overload terminals only when they happened: the common all-served
+        # path keeps the historical summary shape
+        for name in ("preempted", "cancelled", "deadline_missed", "rejected"):
+            v = getattr(self, name)
+            if v:
+                s += f" {name}={v}"
         return s
 
 
@@ -186,6 +224,8 @@ class Engine:
         prefill_chunk: int = 0,
         max_tick_tokens: int = 0,
         admit_lookahead: int = 8,
+        max_queue: int = 0,
+        shed_policy: str = "reject",
         obs: Telemetry | None = None,
     ):
         assert model.cfg.is_causal_lm, "serving engine targets decoder LMs"
@@ -214,6 +254,8 @@ class Engine:
             prefill_chunk=prefill_chunk,
             max_tick_tokens=max_tick_tokens,
             admit_lookahead=admit_lookahead,
+            max_queue=max_queue,
+            shed_policy=shed_policy,
         )
 
     # scheduler-owned state, exposed read-only for callers and tests
@@ -244,13 +286,20 @@ class Engine:
 
     # -- admission hooks ---------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue; False when backpressure rejected the request (bounded
+        queue full under ``shed_policy="reject"`` — see the scheduler)."""
         if len(req.prompt) >= self.max_len:
             raise ValueError(
                 f"prompt length {len(req.prompt)} must be < max_len={self.max_len} "
                 "(the cache needs at least one free position to decode into)"
             )
-        self.sched.submit(req)
+        return self.sched.submit(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or live request by id; its pages/slot are freed
+        immediately. Returns False when ``rid`` is unknown or terminal."""
+        return self.sched.cancel(rid)
 
     def _can_admit(self, req: Request) -> bool:
         """Admission-control hook (the paged engine checks pool headroom)."""
@@ -394,6 +443,11 @@ class Engine:
     def _sync_stats(self) -> None:
         """Backend-gauge refresh hook, driven by the scheduler's admission
         and tick paths (the paged engine publishes its pool gauges here)."""
+
+    def _tick_penalty(self) -> float:
+        """Extra modeled-clock cost of the tick just run (fault injection
+        models slow ticks through this; real backends return 0)."""
+        return 0.0
 
     def _admit(self) -> None:
         self.sched._admit()

@@ -1,0 +1,139 @@
+"""Deterministic fault injection for the serving stack.
+
+Overload paths — preemption, recompute, deadline expiry under slow ticks —
+are hard to reach organically on CPU CI: the unit-test models are tiny and
+the pools amply sized. This module forces them, deterministically:
+
+* :class:`FaultInjector` — a seeded RNG deciding, per call site, whether an
+  allocation fails or a tick runs slow. Same seed -> same fault schedule,
+  so every test and benchmark built on it is reproducible.
+* :class:`FaultyPool` — a :class:`~repro.serve.paged_kv.PagedKVPool` whose
+  ``alloc_prompt`` / ``ensure_writable`` raise
+  :class:`~repro.serve.scheduler.PoolExhausted` when the injector fires,
+  *before* touching any pool state (the same all-or-nothing contract as a
+  genuine exhaustion). Injected prompt-allocation failures exercise
+  mid-admission abort; injected ``ensure_writable`` failures exercise
+  mid-decode and mid-prefill preemption.
+* :class:`FaultyPagedEngine` / :class:`FaultyEngine` — engines wired to an
+  injector. The paged variant swaps in a :class:`FaultyPool` via the
+  ``_make_pool`` hook; the dense variant injects failures in ``_pre_tick``
+  (the dense cache cannot genuinely exhaust, but the scheduler's preemption
+  path is backend-agnostic and must hold for it too). Both model slow ticks
+  through the ``_tick_penalty`` hook, which feeds the scheduler's modeled
+  clock — so deadline behavior under jitter is testable without sleeping.
+
+The injected exception is indistinguishable from a real pool exhaustion to
+the scheduler, so everything proven under injection (no leaks, no double
+assignment, token-identical survivors) transfers to genuine overload; the
+genuine path itself is covered by the small-pool runs in
+``benchmarks/table19_overload.py`` and ``tests/test_overload.py``.
+
+Keep fault rates well below 1.0: at rate 1.0 every retry re-fails and the
+scheduler correctly keeps preempting/re-queueing forever (the process stays
+alive but makes no progress — by design, that is what a permanently failing
+allocator means).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.engine import Engine
+from repro.serve.paged_kv import PagedEngine, PagedKVPool
+from repro.serve.scheduler import PoolExhausted
+
+
+class FaultInjector:
+    """Seeded fault schedule shared by a pool/engine pair.
+
+    ``alloc_fail_rate`` — probability that any single allocation call
+    (``alloc_prompt``, ``ensure_writable``, or the dense ``_pre_tick``)
+    raises :class:`PoolExhausted`. ``slow_tick_rate`` /
+    ``slow_tick_penalty`` — probability and modeled-clock cost of a slow
+    tick (GC pause, contended host, straggling device)."""
+
+    def __init__(
+        self,
+        seed: int = 0,
+        *,
+        alloc_fail_rate: float = 0.0,
+        slow_tick_rate: float = 0.0,
+        slow_tick_penalty: float = 50.0,
+    ):
+        assert 0.0 <= alloc_fail_rate < 1.0, "rate 1.0 never makes progress"
+        assert 0.0 <= slow_tick_rate <= 1.0
+        self._rng = np.random.default_rng(seed)
+        self.alloc_fail_rate = alloc_fail_rate
+        self.slow_tick_rate = slow_tick_rate
+        self.slow_tick_penalty = float(slow_tick_penalty)
+        self.alloc_faults = 0
+        self.slow_ticks = 0
+
+    def alloc_fails(self) -> bool:
+        if self.alloc_fail_rate and self._rng.random() < self.alloc_fail_rate:
+            self.alloc_faults += 1
+            return True
+        return False
+
+    def tick_penalty(self) -> float:
+        if self.slow_tick_rate and self._rng.random() < self.slow_tick_rate:
+            self.slow_ticks += 1
+            return self.slow_tick_penalty
+        return 0.0
+
+
+class FaultyPool(PagedKVPool):
+    """Pool whose allocating entry points fail on the injector's schedule —
+    always *before* any bookkeeping mutates, matching the real pool's
+    reserve-then-commit contract (the rollback regression test runs against
+    both)."""
+
+    def __init__(self, *args, injector: FaultInjector, **kw):
+        super().__init__(*args, **kw)
+        self.injector = injector
+
+    def alloc_prompt(self, slot, tokens, *, register=True) -> int:
+        if self.injector.alloc_fails():
+            raise PoolExhausted("injected alloc_prompt failure (pool state unchanged)")
+        return super().alloc_prompt(slot, tokens, register=register)
+
+    def ensure_writable(self, slot, pos):
+        if self.injector.alloc_fails():
+            raise PoolExhausted("injected ensure_writable failure (pool state unchanged)")
+        return super().ensure_writable(slot, pos)
+
+
+class FaultyPagedEngine(PagedEngine):
+    """Paged engine over a :class:`FaultyPool`. Pass ``injector=``; all
+    other arguments as :class:`PagedEngine`."""
+
+    def __init__(self, *args, injector: FaultInjector, **kw):
+        self.injector = injector  # _make_pool runs inside super().__init__
+        super().__init__(*args, **kw)
+
+    def _make_pool(self) -> PagedKVPool:
+        return FaultyPool(
+            self.num_blocks, self.block_size, self.slots, self.max_blocks,
+            injector=self.injector,
+        )
+
+    def _tick_penalty(self) -> float:
+        return self.injector.tick_penalty()
+
+
+class FaultyEngine(Engine):
+    """Dense engine with injected pre-tick allocation failures and slow
+    ticks. The dense cache cannot genuinely exhaust, so this exists purely
+    to drive the scheduler's backend-agnostic preemption/deadline machinery
+    from the second backend."""
+
+    def __init__(self, *args, injector: FaultInjector, **kw):
+        self.injector = injector
+        super().__init__(*args, **kw)
+
+    def _pre_tick(self, writes) -> None:
+        if self.injector.alloc_fails():
+            raise PoolExhausted("injected dense pre-tick failure")
+        super()._pre_tick(writes)
+
+    def _tick_penalty(self) -> float:
+        return self.injector.tick_penalty()

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serve.engine import Engine, Params, Request
+from repro.serve.scheduler import PoolExhausted
 
 NULL_PAGE = 0
 _CHAIN_ROOT = ("kv-prefix",)
@@ -114,9 +115,9 @@ class PagedKVPool:
 
     def _take(self) -> int:
         if not self._free:
-            raise RuntimeError(
-                "KV page pool exhausted — size the pool for the admitted "
-                "working set (preemption is not implemented)"
+            raise PoolExhausted(
+                "KV page pool exhausted — the scheduler preempts the "
+                "youngest-admitted request and retries"
             )
         blk = self._free.pop()
         self.refcount[blk] = 1
@@ -153,33 +154,51 @@ class PagedKVPool:
         :meth:`register_prompt`): chunked prefill writes page content over
         several ticks, so registering at admission would let another prompt
         reuse half-written pages. Reuse of *already registered* pages is
-        unaffected."""
+        unaffected.
+
+        Reserve-then-commit: the block plan (reuse vs fresh) is computed
+        without touching any pool state, and :class:`PoolExhausted` is
+        raised *before* the first mutation when the fresh blocks don't fit
+        the free list — a failed multi-block alloc leaves the pool
+        byte-identical, never refcounts pinned partway."""
         bs = self.block_size
         s = len(tokens)
         assert self.n_blocks[slot] == 0, "slot must be freed before realloc"
         assert -(-s // bs) <= self.max_blocks
         toks = np.asarray(tokens)
-        self.prompt_blocks += s // bs
+        # -- plan (no mutation) ------------------------------------------------
         # chained content key: block i's key embeds the bytes of blocks 0..i
         key = _CHAIN_ROOT
-        reused = 0
+        plan: list[tuple[tuple, int | None]] = []  # (key, reuse page | None)
         matching = True
+        n_new = 1 if s % bs else 0  # private partial tail block
         for i in range(s // bs):
             key = (key, toks[i * bs : (i + 1) * bs].tobytes())
-            if matching:
-                blk = self._key_to_block.get(key)
-                if blk is not None:
-                    self.refcount[blk] += 1
-                    self.block_tables[slot, i] = blk
-                    self.n_blocks[slot] += 1
-                    self.prefix_hits += 1
-                    reused += bs
-                    continue
+            blk = self._key_to_block.get(key) if matching else None
+            if blk is None:
                 matching = False
+                n_new += 1
+            plan.append((key, blk))
+        if n_new > len(self._free):
+            raise PoolExhausted(
+                f"KV page pool exhausted: prompt needs {n_new} fresh pages, "
+                f"{len(self._free)} free (pool state unchanged)"
+            )
+        # -- commit (cannot fail) ----------------------------------------------
+        self.prompt_blocks += s // bs
+        reused = 0
+        for i, (blk_key, hit) in enumerate(plan):
+            if hit is not None:
+                self.refcount[hit] += 1
+                self.block_tables[slot, i] = hit
+                self.n_blocks[slot] += 1
+                self.prefix_hits += 1
+                reused += bs
+                continue
             blk = self._take()
-            if register and key not in self._key_to_block:
-                self._key_to_block[key] = blk
-                self._block_key[blk] = key
+            if register and blk_key not in self._key_to_block:
+                self._key_to_block[blk_key] = blk
+                self._block_key[blk] = blk_key
             self.block_tables[slot, i] = blk
             self.n_blocks[slot] += 1
         if s % bs:
@@ -278,21 +297,34 @@ class PagedEngine(Engine):
         max_len: int,
         block_size: int = 16,
         num_blocks: int | None = None,
+        admission: str = "reserve",
         **kw,
     ):
+        if admission not in ("reserve", "optimistic"):
+            raise ValueError("admission must be 'reserve' or 'optimistic'")
         self.block_size = block_size
         self.max_blocks = -(-max_len // block_size)
         # default: capacity-equivalent to the dense cache (every slot may
         # hold max_blocks private pages) plus the null page
         self.num_blocks = num_blocks or slots * self.max_blocks + 1
-        self.pool = PagedKVPool(self.num_blocks, block_size, slots, self.max_blocks)
-        # worst-case page reservation per slot: admission only proceeds when
-        # the pool can cover every admitted request growing to its full
-        # budget, so decode can never hit pool exhaustion mid-flight (there
-        # is no preemption). Prefix sharing only frees pages beyond this.
+        self.admission = admission
+        self.slots = slots  # also set by Engine.__init__; _make_pool needs it now
+        self.pool = self._make_pool()
+        # "reserve" admission (the default) holds back each slot's worst-case
+        # page budget, so decode can never hit pool exhaustion mid-flight —
+        # but it leaves pool capacity idle whenever requests finish early or
+        # share prefixes. "optimistic" admits on *current* headroom (prompt
+        # pages + one decode page) and leans on the scheduler's recompute
+        # preemption when the gamble loses — higher utilization under
+        # overload, identical greedy tokens (see the scheduler docs).
         self._reserved = np.zeros(slots, np.int64)
         super().__init__(model, params, slots=slots, max_len=max_len, **kw)
         self.stats.paged = True
+
+    def _make_pool(self) -> PagedKVPool:
+        """Pool-constructor hook (fault injection wraps it; see
+        :mod:`repro.serve.faults`)."""
+        return PagedKVPool(self.num_blocks, self.block_size, self.slots, self.max_blocks)
 
     def _make_cache(self) -> Params:
         return self.model.init_cache(
@@ -313,20 +345,31 @@ class PagedEngine(Engine):
     def _pages_needed(self, req: Request) -> int:
         # worst case, no prefix hits: prefill writes len(prompt) positions
         # and decode at most max_new - 1 more, capped at max_len by the
-        # engine's capacity cut-off
-        tokens = min(len(req.prompt) + max(req.max_new - 1, 0), self.max_len)
+        # engine's capacity cut-off. After recompute preemption the prompt
+        # has absorbed len(out) generated tokens, so the remaining decode
+        # budget shrinks by the same amount — the worst case is invariant
+        # under preemption.
+        remaining = max(req.max_new - len(req.out) - 1, 0)
+        tokens = min(len(req.prompt) + remaining, self.max_len)
         return max(-(-tokens // self.block_size), 1)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         need = self._pages_needed(req)
         if need > self.num_blocks - 1:
             raise ValueError(
                 f"request needs up to {need} pages but the pool only has "
                 f"{self.num_blocks - 1} (block_size={self.block_size})"
             )
-        super().submit(req)
+        return super().submit(req)
 
     def _can_admit(self, req: Request) -> bool:
+        if self.admission == "optimistic":
+            # current headroom only: the prompt's worst-case fresh pages plus
+            # one decode page. Over-admission is resolved by preemption, and
+            # submit()'s hard cap guarantees a sole occupant always fits —
+            # so optimistic admission can thrash but never livelock.
+            need_now = max(-(-len(req.prompt) // self.block_size), 1) + 1
+            return self.pool.free_pages >= need_now
         return (self.num_blocks - 1) - int(self._reserved.sum()) >= self._pages_needed(req)
 
     def _on_admit(self, slot: int, req: Request) -> int:
@@ -417,14 +460,23 @@ class PagedEngine(Engine):
         """Make every position about to be written reachable and private:
         allocate blocks as rows cross into them (decode growth) and
         copy-on-write shared blocks (fork divergence; the recomputed last
-        prompt token of a fully prefix-reused prompt)."""
+        prompt token of a fully prefix-reused prompt).
+
+        On :class:`PoolExhausted` partway through, copies already planned
+        are applied before re-raising — the pool's block tables were
+        remapped the moment each ``ensure_writable`` returned, so the device
+        pages must follow or a retried tick would read stale bytes. The
+        retry (after the scheduler preempts a victim) re-runs every
+        ``ensure_writable``, which is a no-op for blocks already private."""
         copies: list[tuple[int, int]] = []
         bs = self.block_size
-        for slot, p0, n in writes:
-            for bi in range(p0 // bs, (p0 + n - 1) // bs + 1):
-                copies += self.pool.ensure_writable(slot, bi * bs)
-        if copies:
-            self._apply_copies(copies)
+        try:
+            for slot, p0, n in writes:
+                for bi in range(p0 // bs, (p0 + n - 1) // bs + 1):
+                    copies += self.pool.ensure_writable(slot, bi * bs)
+        finally:
+            if copies:
+                self._apply_copies(copies)
 
     def _unified_tick(
         self, tokens: np.ndarray, pos: np.ndarray, seq_lens: np.ndarray

@@ -1,4 +1,5 @@
-"""Unified-step scheduler: chunked prefill merged with decode (both engines).
+"""Unified-step scheduler: chunked prefill merged with decode (both engines),
+with overload-safe degradation (preemption, deadlines, backpressure).
 
 Layering (after the PR-6 refactor):
 
@@ -6,13 +7,14 @@ Layering (after the PR-6 refactor):
   the request queue, the slot table, per-slot positions and prefill
   progress, lookahead admission, the per-tick token budget, sampling
   bookkeeping, and request lifecycle (first token, EOS, ``max_new``,
-  capacity cut-off).
+  capacity cut-off — plus the overload terminals: preemption, deadline
+  miss, cancellation, rejection).
 * ``Engine`` / ``PagedEngine`` are thin **backends** behind it: they own the
   cache buffers and the jitted model calls, and expose a small hook surface
   (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` / ``_pre_tick`` /
-  ``_unified_tick`` / ``_reset_slot`` / ``_sample`` / ``_sync_stats``).
-  Dense-cache vs paged-pool allocation is the only real divergence between
-  them.
+  ``_unified_tick`` / ``_reset_slot`` / ``_sample`` / ``_sync_stats`` /
+  ``_tick_penalty``). Dense-cache vs paged-pool allocation is the only real
+  divergence between them.
 
 Two admission modes:
 
@@ -46,15 +48,56 @@ queue head (e.g. the paged pool lacks headroom), up to ``admit_lookahead``
 later requests are considered so a small request is not starved behind a
 large one; among admissible requests, submit order is preserved.
 
+**Overload safety** (the robustness tentpole):
+
+* *Preemption with recompute*: when a backend allocation fails mid-flight —
+  a decode tick crossing a page boundary, a copy-on-write fork divergence,
+  or a chunked-prefill page append — the backend raises
+  :class:`PoolExhausted` and the scheduler preempts the **youngest-admitted
+  victim**: its slot and pages are freed immediately and the request is
+  re-queued at the *front* of the queue with ``prompt + generated_so_far``
+  as its new prompt (the vLLM recompute policy). Recomputing the prefix
+  rebuilds byte-identical KV (quantization is a pure function of the token
+  stream), so under greedy decoding a preempted request's final token
+  stream is exactly the un-preempted one — asserted by the identity tests
+  and ``benchmarks/table19_overload.py``. The tick is then re-planned
+  without the victim and retried; preemption repeats (youngest first)
+  until the allocation fits. A request preempted *after* producing tokens
+  resumes with decode-equivalent capacity semantics, so even the
+  cache-capacity cut-off tick is identical to the un-preempted schedule.
+* *Deadlines*: per-request ``ttft_deadline_ms`` / ``total_deadline_ms``
+  are enforced against the scheduler's **modeled clock** (see below) at
+  every tick boundary, whether the request is still queued or live; a miss
+  frees its pages/slot immediately and terminates it with status
+  ``deadline_missed``.
+* *Cancellation*: :meth:`cancel` removes a queued request or tears down a
+  live one (pages freed immediately), terminal status ``cancelled``.
+* *Backpressure*: ``max_queue`` bounds the queue. An overflowing
+  :meth:`submit` is resolved by ``shed_policy``: ``"reject"`` turns the
+  *new* request away, ``"shed-oldest-queued"`` evicts the oldest queued
+  request in its favor. Either way the loser gets terminal status
+  ``rejected`` instead of growing the queue without bound.
+
+**Modeled clock**: ``self.clock`` advances by ``tick_overhead +
+token_cost * (valid tokens)`` per tick (plus the backend's
+``_tick_penalty`` — fault injection models slow ticks through it), and by
+the prompt length for legacy whole-prompt prefills. It is a deterministic
+function of the schedule — the same clock the arrival benchmarks gate on —
+which makes deadline behavior reproducible and CI-testable, unlike
+wall-clock on a shared runner. Callers may advance it across idle gaps
+with :meth:`advance_clock`.
+
 **Telemetry** (``repro.obs``): the scheduler is the single writer of every
 serving counter and the emitter of the per-request lifecycle trace —
 ``queued -> admitted -> prefill_chunk[i] -> first_token -> decode -> done``
-on one trace track per request, plus per-tick ``tick``/``unified_step``
-spans on the scheduler track. Centralizing the updates here (rather than in
-backend-specific paths) is what keeps both engines' stats drift-free by
-construction; the backends only refresh their own gauges when the scheduler
-calls ``_sync_stats``. Metric names and units are documented in the README
-observability section.
+on one trace track per request (a preempted request re-enters at
+``queued``, marked by a ``preempted`` instant; the overload terminals emit
+``cancelled`` / ``deadline_missed`` / ``rejected`` instants), plus per-tick
+``tick``/``unified_step`` spans on the scheduler track. Centralizing the
+updates here (rather than in backend-specific paths) is what keeps both
+engines' stats drift-free by construction; the backends only refresh their
+own gauges when the scheduler calls ``_sync_stats``. Metric names and units
+are documented in the README observability section.
 """
 from __future__ import annotations
 
@@ -66,10 +109,21 @@ import numpy as np
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.serve.engine import Engine, Request
 
+SHED_POLICIES = ("reject", "shed-oldest-queued")
+
+
+class PoolExhausted(RuntimeError):
+    """A backend allocation failed for want of free pages. Raised by
+    :class:`~repro.serve.paged_kv.PagedKVPool` (and the fault injectors)
+    *before* any bookkeeping is mutated — every raising operation is
+    all-or-nothing — so the scheduler can preempt a victim and retry."""
+
 
 class UnifiedScheduler:
     """Owns the queue, slot table, and per-tick token budget; drives a
-    backend engine through admission, unified ticks, and slot recycling."""
+    backend engine through admission, unified ticks, and slot recycling —
+    and degrades gracefully under overload (preempt / shed / expire)
+    instead of crashing."""
 
     def __init__(
         self,
@@ -79,6 +133,10 @@ class UnifiedScheduler:
         prefill_chunk: int = 0,
         max_tick_tokens: int = 0,
         admit_lookahead: int = 8,
+        max_queue: int = 0,
+        shed_policy: str = "reject",
+        tick_overhead: float = 2.0,
+        token_cost: float = 1.0,
     ):
         if prefill_chunk < 0:
             raise ValueError("prefill_chunk must be >= 0 (0 = whole-prompt)")
@@ -86,15 +144,25 @@ class UnifiedScheduler:
             raise ValueError("max_tick_tokens must be >= 0 (0 = unlimited)")
         if admit_lookahead < 1:
             raise ValueError("admit_lookahead must be >= 1")
+        if max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of {SHED_POLICIES}")
         self.backend = backend
         self.slots = slots
         self.prefill_chunk = prefill_chunk
         self.max_tick_tokens = max_tick_tokens
         self.admit_lookahead = admit_lookahead
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.tick_overhead = float(tick_overhead)
+        self.token_cost = float(token_cost)
+        self.clock = 0.0  # modeled time (ms-equivalent cost units)
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)  # next cache write position
         self._pf_done = np.zeros(slots, np.int32)  # prompt tokens in cache
+        self._admit_seq = 0  # monotonic admission order (victim selection)
         # per-request lifecycle state: open spans + timing, keyed by rid
         self._lt: dict[int, dict] = {}
 
@@ -106,18 +174,100 @@ class UnifiedScheduler:
     def obs(self):
         return self.backend.obs
 
+    def advance_clock(self, dt: float) -> None:
+        """Advance the modeled clock across an idle gap (arrival-driven
+        benchmarks jump to the next arrival; deadlines keep ticking)."""
+        if dt > 0:
+            self.clock += dt
+
     # -- admission -------------------------------------------------------------
 
-    def submit(self, req: "Request") -> None:
-        self.queue.append(req)
+    def submit(self, req: "Request") -> bool:
+        """Enqueue a request. Returns False when backpressure turned it away
+        (``max_queue`` reached, ``shed_policy="reject"``): the request is
+        terminated with status ``rejected`` and never queued. Under
+        ``"shed-oldest-queued"`` the *oldest queued* request is rejected in
+        its favor and this submit still returns True."""
         tr = self.obs.tracer
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            if self.shed_policy == "reject":
+                self._reject(req)
+                return False
+            victim = self.queue.popleft()  # shed-oldest-queued
+            self._reject(victim)
+        self.queue.append(req)
+        req.status = "queued"
         self._lt[req.rid] = {
             "queued": tr.begin("queued", track=f"req:{req.rid}", rid=req.rid,
                                prompt_len=len(req.prompt)),
             "t_submit": tr.now(),
             "t_last_tok": 0,
+            "submit_clock": self.clock,
+            "first_done": False,
         }
         self.obs.metrics.gauge("serve.queue_depth").set(len(self.queue))
+        return True
+
+    def _reject(self, req: "Request") -> None:
+        """Terminal ``rejected``: either a fresh submit bounced off a full
+        queue, or the oldest queued request was shed in favor of a new one."""
+        tr = self.obs.tracer
+        lt = self._lt.pop(req.rid, None)
+        tr.instant("rejected", track=f"req:{req.rid}", rid=req.rid)
+        if lt is not None and "queued" in lt:  # shed victim: close its span
+            tr.end(lt["queued"], rejected=True)
+        req.status = "rejected"
+        req.done = True
+        self.obs.metrics.counter("serve.rejected").inc()
+        self.obs.metrics.gauge("serve.queue_depth").set(len(self.queue))
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by id, wherever it is: drop it from the queue or
+        tear down its live slot (pages freed immediately). Returns False
+        when ``rid`` is unknown or already terminal."""
+        for j, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[j]
+                self._terminal_queued(req, "cancelled")
+                return True
+        for slot, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                self._release(slot, "cancelled")
+                return True
+        return False
+
+    def _terminal_queued(self, req: "Request", status: str) -> None:
+        """Terminate a request that never (re-)reached a slot."""
+        tr = self.obs.tracer
+        lt = self._lt.pop(req.rid, None)
+        tr.instant(status, track=f"req:{req.rid}", rid=req.rid)
+        if lt is not None and "queued" in lt:
+            tr.end(lt["queued"])
+        req.status = status
+        req.done = True
+        self.obs.metrics.counter(f"serve.{status}").inc()
+        self.obs.metrics.gauge("serve.queue_depth").set(len(self.queue))
+
+    def _expire_deadlines(self) -> None:
+        """Terminate every queued or live request whose deadline has passed
+        on the modeled clock. TTFT deadlines only apply until the first
+        token; total deadlines until completion. Freed pages are returned
+        immediately, so an expiring request makes room this very tick."""
+        now = self.clock
+        for req in [r for r in self.queue if self._deadline_missed(r, now)]:
+            self.queue.remove(req)
+            self._terminal_queued(req, "deadline_missed")
+        for slot, req in enumerate(self.active):
+            if req is not None and self._deadline_missed(req, now):
+                self._release(slot, "deadline_missed")
+
+    def _deadline_missed(self, req: "Request", now: float) -> bool:
+        lt = self._lt[req.rid]
+        waited = now - lt["submit_clock"]
+        if (req.ttft_deadline_ms is not None and not lt["first_done"]
+                and waited > req.ttft_deadline_ms):
+            return True
+        return req.total_deadline_ms is not None and waited > req.total_deadline_ms
 
     def _next_admissible(self) -> "Request | None":
         """Pop the earliest-submitted admissible request, scanning at most
@@ -141,59 +291,131 @@ class UnifiedScheduler:
                     if admitted:
                         self._post_admit(admitted)
                     return
+                if not self._admit_into(slot, req):
+                    # backend allocation failed mid-admission (injected
+                    # fault): the request goes back to the head untouched
+                    if admitted:
+                        self._post_admit(admitted)
+                    return
                 admitted += 1
-                tr = self.obs.tracer
-                lt = self._lt[req.rid]
-                tr.end(lt.pop("queued"), slot=slot)
-                track = f"req:{req.rid}"
-                lt["admitted"] = tr.begin("admitted", track=track, rid=req.rid,
-                                          slot=slot)
-                lt["prefill"] = tr.begin("prefill", track=track, rid=req.rid,
-                                         tokens=len(req.prompt))
-                if self.chunked:
-                    # prefix-cache hits (paged) skip straight past the shared
-                    # leading positions, but the last prompt token is always
-                    # recomputed so its logits can seed sampling
-                    reused = self.backend._on_admit(slot, req)
-                    start = min(reused, len(req.prompt) - 1)
-                    self._pf_done[slot] = start
-                    self.pos[slot] = start
-                    self.active[slot] = req
-                else:
-                    # whole-prompt admission: one jitted prefill call, slot
-                    # joins the decode batch next tick (legacy baseline).
-                    # Sampling and all lifecycle/counter updates happen HERE,
-                    # not in the backend, so dense and paged engines can
-                    # never drift on the shared counters.
-                    logits_row = self.backend._prefill_into(slot, req)
-                    self.pos[slot] = len(req.prompt)
-                    self._pf_done[slot] = len(req.prompt)
-                    self.active[slot] = req
-                    tr.end(lt.pop("prefill"))
-                    self._emit(slot, logits_row, capacity=False)
         if admitted:
             self._post_admit(admitted)
+
+    def _admit_into(self, slot: int, req: "Request") -> bool:
+        """Bind ``req`` to ``slot``; False (and re-queue at the head) when
+        the backend's storage allocation raised :class:`PoolExhausted`."""
+        tr = self.obs.tracer
+        lt = self._lt[req.rid]
+        track = f"req:{req.rid}"
+        tr.end(lt.pop("queued"), slot=slot)
+        lt["admitted"] = tr.begin("admitted", track=track, rid=req.rid, slot=slot)
+        lt["prefill"] = tr.begin("prefill", track=track, rid=req.rid,
+                                 tokens=len(req.prompt))
+        lt["admit_seq"] = self._admit_seq
+        self._admit_seq += 1
+        req.status = "active"
+        try:
+            if self.chunked:
+                # prefix-cache hits (paged) skip straight past the shared
+                # leading positions, but the last prompt token is always
+                # recomputed so its logits can seed sampling
+                reused = self.backend._on_admit(slot, req)
+                start = min(reused, len(req.prompt) - 1)
+                self._pf_done[slot] = start
+                self.pos[slot] = start
+                self.active[slot] = req
+            else:
+                # whole-prompt admission: one jitted prefill call, slot
+                # joins the decode batch next tick (legacy baseline).
+                # Sampling and all lifecycle/counter updates happen HERE,
+                # not in the backend, so dense and paged engines can
+                # never drift on the shared counters.
+                logits_row = self.backend._prefill_into(slot, req)
+                self.pos[slot] = len(req.prompt)
+                self._pf_done[slot] = len(req.prompt)
+                self.active[slot] = req
+                self.clock += len(req.prompt) * self.token_cost
+                tr.end(lt.pop("prefill"))
+                resumed = len(req.out) > 0  # recompute after preemption
+                self._emit(slot, logits_row, capacity=resumed)
+        except PoolExhausted:
+            tr.instant("admit_aborted", track=track, rid=req.rid)
+            tr.end(lt.pop("prefill"), aborted=True)
+            tr.end(lt.pop("admitted"), aborted=True)
+            lt["queued"] = tr.begin("queued", track=track, rid=req.rid,
+                                    prompt_len=len(req.prompt))
+            req.status = "queued"
+            self.queue.appendleft(req)
+            return False
+        return True
 
     def _post_admit(self, admitted: int) -> None:
         self.obs.metrics.counter("serve.admitted").inc(admitted)
         self.obs.metrics.gauge("serve.queue_depth").set(len(self.queue))
         self.backend._sync_stats()
 
+    # -- preemption ------------------------------------------------------------
+
+    def _preempt_youngest(self) -> bool:
+        """Free the youngest-admitted live request's slot and pages and
+        re-queue it at the queue head with ``prompt + generated_so_far`` as
+        its new prompt (recompute preemption). Returns False when there is
+        nothing left to preempt."""
+        cands = [
+            (self._lt[req.rid]["admit_seq"], slot)
+            for slot, req in enumerate(self.active)
+            if req is not None
+        ]
+        if not cands:
+            return False
+        _, slot = max(cands)
+        req = self.active[slot]
+        tr = self.obs.tracer
+        lt = self._lt[req.rid]
+        track = f"req:{req.rid}"
+        tr.instant("preempted", track=track, rid=req.rid,
+                   generated=len(req.out), pos=int(self.pos[slot]))
+        if "decode" in lt:
+            tr.end(lt.pop("decode"), tokens=len(req.out))
+        if "prefill" in lt:
+            tr.end(lt.pop("prefill"), preempted=True)
+        tr.end(lt.pop("admitted"), preempted=True)
+        # recompute prompt: everything generated so far becomes prompt, so
+        # re-admission rebuilds byte-identical KV and the next sampled token
+        # continues the stream exactly where it stopped. Only tokens not
+        # already absorbed by an earlier preemption are appended (a request
+        # preempted again before progressing must not double-absorb).
+        absorbed = len(req.prompt) - len(req.prompt0)
+        fresh_out = req.out[absorbed:]
+        if fresh_out:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(fresh_out, np.int32)]
+            )
+        req.preemptions += 1
+        req.status = "queued"
+        self.active[slot] = None
+        self._pf_done[slot] = 0
+        self.backend._reset_slot(slot)  # frees pages; also zeroes pos[slot]
+        self.queue.appendleft(req)
+        lt["queued"] = tr.begin("queued", track=track, rid=req.rid,
+                                prompt_len=len(req.prompt))
+        met = self.obs.metrics
+        met.counter("serve.preempted").inc()
+        met.gauge("serve.queue_depth").set(len(self.queue))
+        self.backend._sync_stats()
+        return True
+
     # -- tick ------------------------------------------------------------------
 
-    def step(self) -> int:
-        """Admit, then run one unified tick. Returns the number of valid
-        tokens processed (decode rows + prefill-chunk tokens) — the unit the
-        arrival benchmark's modeled clock advances by."""
-        self._admit()
+    def _plan_tick(self) -> tuple[list[int], dict[int, int]]:
+        """Partition live slots into decode rows and prefill chunks under
+        the per-tick token budget (chunk sizes per slot)."""
         decode_rows, prefill_rows = [], []
         for i, req in enumerate(self.active):
             if req is None:
                 continue
-            (decode_rows if self._pf_done[i] >= len(req.prompt) else prefill_rows).append(i)
-        if not decode_rows and not prefill_rows:
-            return 0
-
+            (decode_rows if self._pf_done[i] >= len(req.prompt)
+             else prefill_rows).append(i)
         # decode rows always advance; prefill chunks fill the remaining
         # token budget in slot order (at least one token when nothing else
         # would run, so the tick always makes progress)
@@ -209,6 +431,30 @@ class UnifiedScheduler:
             if n > 0:
                 chunks[i] = n
                 budget_left -= n
+        return decode_rows, chunks
+
+    def step(self) -> int:
+        """Expire deadlines, admit, then run one unified tick — preempting
+        the youngest-admitted victims if the backend cannot back the tick's
+        writes. Returns the number of valid tokens processed (decode rows +
+        prefill-chunk tokens) — the unit the modeled clock advances by."""
+        self._expire_deadlines()
+        self._admit()
+        while True:
+            decode_rows, chunks = self._plan_tick()
+            if not decode_rows and not chunks:
+                return 0
+            writes = [
+                (i, int(self.pos[i]), int(chunks.get(i, 1)))
+                for i in (*decode_rows, *chunks)
+            ]
+            try:
+                self.backend._pre_tick(writes)
+            except PoolExhausted:
+                if not self._preempt_youngest():
+                    raise  # nothing left to preempt: genuinely oversized
+                continue  # re-plan without the victim and retry
+            break
 
         # bucket the tick width: 1 for all-decode ticks, the full chunk
         # budget whenever any prefill row rides along (two jit shapes total)
@@ -239,8 +485,6 @@ class UnifiedScheduler:
             for i, n in chunks.items()
         }
 
-        writes = [(i, int(self.pos[i]), int(seq_lens[i])) for i in (*decode_rows, *chunks)]
-        self.backend._pre_tick(writes)
         self.backend._sync_stats()  # page gauges peak right after allocation
         with tr.span("unified_step", track="sched"):
             logits = self.backend._unified_tick(tokens, self.pos, seq_lens)
@@ -263,7 +507,10 @@ class UnifiedScheduler:
                 # first output token from the final chunk's logits
                 self.backend._on_prefill_done(i, req)
                 tr.end(self._lt[req.rid].pop("prefill"))
-                self._emit(i, logits_np[i], capacity=False)
+                # a recompute prefill (preempted request with tokens) is the
+                # decode tick it replaces, capacity cut-off included
+                resumed = len(req.out) > 0
+                self._emit(i, logits_np[i], capacity=resumed)
         for i in decode_rows:
             self.pos[i] += 1
             self._emit(i, logits_np[i], capacity=True)
@@ -272,13 +519,19 @@ class UnifiedScheduler:
             (tick_span.t1 - tick_span.t0) / 1e6 if tick_span.t1 else 0.0
         )
         self.backend._sync_stats()
-        return len(decode_rows) + sum(chunks.values())
+        n_tokens = len(decode_rows) + sum(chunks.values())
+        self.clock += (
+            self.tick_overhead
+            + n_tokens * self.token_cost
+            + self.backend._tick_penalty()
+        )
+        return n_tokens
 
     def _emit(self, slot: int, logits_row: np.ndarray, *, capacity: bool) -> None:
         """Sample one token for ``slot`` and run the request lifecycle:
-        EOS / ``max_new`` / (decode only) cache-capacity cut-off. The single
-        place a generated token is counted, for both admission modes and
-        both engines."""
+        EOS / ``max_new`` / (decode and recompute rows) cache-capacity
+        cut-off. The single place a generated token is counted, for both
+        admission modes and both engines."""
         req = self.active[slot]
         tok = self.backend._sample(logits_row)
         req.out.append(tok)
@@ -287,38 +540,50 @@ class UnifiedScheduler:
         met.counter("serve.tokens").inc()
         now = tr.now()
         lt = self._lt[req.rid]
-        if len(req.out) == 1:
-            track = f"req:{req.rid}"
+        track = f"req:{req.rid}"
+        if not lt["first_done"]:
+            lt["first_done"] = True
             tr.instant("first_token", track=track, rid=req.rid)
-            lt["decode"] = tr.begin("decode", track=track, rid=req.rid)
             met.histogram("serve.ttft_ms", "ms").observe(
                 (now - lt["t_submit"]) / 1e6
             )
-        else:
+        elif lt["t_last_tok"]:
             met.histogram("serve.tbt_ms", "ms").observe(
                 (now - lt["t_last_tok"]) / 1e6
             )
+        if "decode" not in lt:  # first token, or first after a recompute
+            lt["decode"] = tr.begin("decode", track=track, rid=req.rid)
         lt["t_last_tok"] = now
         hit_eos = self.backend.eos_id is not None and tok == self.backend.eos_id
         full = capacity and self.pos[slot] >= self.backend.max_len - 1
         if hit_eos or len(req.out) >= req.max_new or full:
-            req.done = True
-            self._free(slot)
+            self._release(slot, "done")
 
-    def _free(self, slot: int) -> None:
+    def _release(self, slot: int, status: str) -> None:
+        """Free a live slot and terminate its request: the normal completion
+        path (``done``) and the overload terminals (``cancelled`` /
+        ``deadline_missed``) share the teardown, so pages are always
+        returned and gauges refreshed immediately."""
         req = self.active[slot]
         self.active[slot] = None
         self._pf_done[slot] = 0
         self.backend._reset_slot(slot)  # also zeroes self.pos[slot]
+        req.status = status
+        req.done = True
         lt = self._lt.pop(req.rid, None)
+        tr = self.obs.tracer
+        track = f"req:{req.rid}"
         if lt is not None:
-            tr = self.obs.tracer
-            track = f"req:{req.rid}"
+            tr.instant(status, track=track, rid=req.rid)
             if "decode" in lt:
                 tr.end(lt["decode"], tokens=len(req.out))
+            if "prefill" in lt:  # torn down mid-prefill (cancel/deadline)
+                tr.end(lt["prefill"], aborted=True)
             tr.end(lt["admitted"], tokens=len(req.out))
-            tr.instant("done", track=track, rid=req.rid)
-        self.obs.metrics.counter("serve.finished").inc()
+        name = "finished" if status == "done" else status
+        self.obs.metrics.counter(f"serve.{name}").inc()
+        if status != "done":
+            self.backend._sync_stats()
 
     def run(self, max_ticks: int = 256) -> None:
         for _ in range(max_ticks):

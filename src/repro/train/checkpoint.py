@@ -1,10 +1,19 @@
 """Fault-tolerant checkpointing: pure-JAX (npz + manifest), asynchronous
 writer thread, latest-k retention, integrity manifest with step + tree
 structure, and restore-with-resharding (elastic resume onto a different
-mesh)."""
+mesh).
+
+Crash-safety contract: a checkpoint is written to a hidden temp directory,
+its manifest last (the commit marker), then atomically renamed into place —
+a crash mid-write leaves either no visible checkpoint or a complete one.
+Restore trusts but verifies: a checkpoint whose npz is torn (truncated
+write, bad zip) or whose array count disagrees with its manifest is logged
+and *skipped*, falling back to the next older step, instead of taking the
+trainer down with it."""
 from __future__ import annotations
 
 import json
+import logging
 import pathlib
 import shutil
 import threading
@@ -13,6 +22,9 @@ from typing import Any
 
 import jax
 import numpy as np
+import zipfile
+
+log = logging.getLogger(__name__)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -114,18 +126,51 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_flat(self, step: int) -> dict[str, np.ndarray] | None:
+        """Load and validate one checkpoint's arrays; None (with a log line)
+        when it is torn: unreadable/truncated npz, unreadable manifest, or an
+        array count that disagrees with the manifest's commit record."""
+        path = self.dir / f"step_{step:012d}"
+        try:
+            manifest = json.loads((path / "MANIFEST.json").read_text())
+            with np.load(path / "arrays.npz") as z:
+                flat = dict(z)  # materialise: decompresses, catching torn zips
+        except (OSError, ValueError, KeyError, json.JSONDecodeError, zipfile.BadZipFile) as e:
+            log.warning("skipping torn checkpoint %s: %s", path.name, e)
+            return None
+        if manifest.get("n_arrays") != len(flat):
+            log.warning(
+                "skipping torn checkpoint %s: manifest records %s arrays, npz has %d",
+                path.name, manifest.get("n_arrays"), len(flat),
+            )
+            return None
+        return flat
+
     def restore(self, like: Any, step: int | None = None, shardings: Any = None) -> tuple[Any, int]:
         """Restore into the structure of ``like``; optionally device_put with
-        ``shardings`` (elastic resume onto a new mesh)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        path = self.dir / f"step_{step:012d}"
-        flat = dict(np.load(path / "arrays.npz"))
+        ``shardings`` (elastic resume onto a new mesh). With ``step=None``
+        (the default) torn checkpoints are logged and skipped, walking back
+        to the newest *valid* step; an explicitly requested step that is
+        torn raises instead of silently substituting another."""
+        if step is not None:
+            flat = self._load_flat(step)
+            if flat is None:
+                raise FileNotFoundError(
+                    f"checkpoint step_{step:012d} in {self.dir} is torn or missing"
+                )
+            return self._rebuild(like, flat, shardings), step
+        for cand in reversed(self.all_steps()):
+            flat = self._load_flat(cand)
+            if flat is not None:
+                return self._rebuild(like, flat, shardings), cand
+        raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+
+    @staticmethod
+    def _rebuild(like: Any, flat: dict, shardings: Any) -> Any:
         tree = _unflatten(like, flat)
         if shardings is not None:
             tree = jax.device_put(tree, shardings)
-        return tree, step
+        return tree
 
     def manifest(self, step: int) -> dict:
         return json.loads((self.dir / f"step_{step:012d}" / "MANIFEST.json").read_text())

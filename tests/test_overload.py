@@ -1,0 +1,477 @@
+"""Overload-safe serving tests: recompute preemption, deadlines,
+cancellation, backpressure, fault injection, and pool-rollback atomicity.
+
+The contract under test: a serving stack pushed past its KV-pool capacity
+(or hit with injected allocation failures) must **degrade, not crash** —
+every surviving request's greedy token stream is byte-identical to an
+amply-resourced run (the vLLM recompute guarantee: preemption frees the
+victim's pages and re-queues it with ``prompt + generated_so_far``, and
+recomputed KV is a pure function of the token stream), terminal states
+free pages immediately, and the pool drains to exactly its initial state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.serve.faults import (
+    FaultInjector,
+    FaultyEngine,
+    FaultyPagedEngine,
+    FaultyPool,
+)
+from repro.serve.paged_kv import PagedEngine, PagedKVPool
+from repro.serve.scheduler import PoolExhausted
+
+CFG = ModelConfig(
+    name="overload-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=97, loss_chunk=32, dtype=jnp.float32,
+)
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def trained_params():
+    """Briefly trained smoke model (same recipe as test_scheduler): random
+    init sits at near-tie argmaxes where unrelated numeric jitter flips
+    tokens; a trained checkpoint makes greedy identity meaningful."""
+    from repro.core.pipeline import pretrain_fp
+    from repro.data import synthetic
+
+    tokens = synthetic.markov_corpus(CFG.vocab, 20_000, seed=0)
+    _, params = pretrain_fp(
+        CFG, synthetic.lm_batches(tokens, 8, 32, steps=80, seed=1), lr=3e-3
+    )
+    return params
+
+
+def _workload(rng, lens, max_new):
+    return [
+        Request(rid=i, prompt=rng.integers(0, CFG.vocab, size=s).astype(np.int32),
+                max_new=m)
+        for i, (s, m) in enumerate(zip(lens, max_new))
+    ]
+
+
+def _mixed(rng, n=8):
+    return _workload(rng, rng.integers(3, 40, size=n), rng.integers(3, 10, size=n))
+
+
+def _reference(model, params, reqs_factory):
+    """Greedy outputs on an amply-resourced dense engine."""
+    reqs = reqs_factory()
+    eng = Engine(model, params, slots=4, max_len=MAX_LEN,
+                 prefill_chunk=8, max_tick_tokens=16)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(2000)
+    assert all(r.status == "done" for r in reqs)
+    return [r.out for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Recompute preemption: token identity on both engines, kv 16/8
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+@pytest.mark.parametrize("engine", ["paged-small-pool", "dense-faults", "paged-faults"])
+def test_preempted_requests_are_token_identical(trained_params, engine, kv_bits):
+    """Requests preempted mid-decode (genuine pool exhaustion on an
+    undersized pool, or injected allocation failures on either backend)
+    must finish with exactly the token stream of an unconstrained run."""
+    cfg = CFG if kv_bits == 16 else CFG.replace(kv_bits=kv_bits, kv_group=0)
+    model = Model(cfg)
+    factory = lambda: _mixed(np.random.default_rng(21))
+    ref = _reference(model, trained_params, factory)
+
+    kw = dict(slots=4, max_len=MAX_LEN, prefill_chunk=8, max_tick_tokens=16)
+    if engine == "paged-small-pool":
+        eng = PagedEngine(model, trained_params, block_size=8, num_blocks=13,
+                          admission="optimistic", **kw)
+    elif engine == "dense-faults":
+        eng = FaultyEngine(model, trained_params,
+                           injector=FaultInjector(7, alloc_fail_rate=0.15), **kw)
+    else:
+        eng = FaultyPagedEngine(model, trained_params, block_size=8,
+                                num_blocks=13, admission="optimistic",
+                                injector=FaultInjector(3, alloc_fail_rate=0.1),
+                                **kw)
+    reqs = factory()
+    for r in reqs:
+        eng.submit(r)
+    eng.run(5000)
+    assert all(r.status == "done" for r in reqs)
+    assert sum(r.preemptions for r in reqs) > 0, "scenario failed to preempt"
+    assert [r.out for r in reqs] == ref
+    assert eng.stats.preempted == sum(r.preemptions for r in reqs)
+    if hasattr(eng, "pool"):
+        assert eng.pool.pages_in_use == 0
+        assert eng.pool.free_pages == eng.num_blocks - 1
+
+
+def test_preemption_survives_whole_prompt_admission(trained_params):
+    """The legacy (non-chunked) admission path recomputes through one jitted
+    prefill call; preemption identity must hold there too."""
+    model = Model(CFG)
+    factory = lambda: _mixed(np.random.default_rng(5))
+    ref_reqs = factory()
+    ref_eng = Engine(model, trained_params, slots=4, max_len=MAX_LEN)
+    for r in ref_reqs:
+        ref_eng.submit(r)
+    ref_eng.run(2000)
+    assert all(r.status == "done" for r in ref_reqs)
+
+    eng = FaultyPagedEngine(model, trained_params, slots=4, max_len=MAX_LEN,
+                            block_size=8, num_blocks=13, admission="optimistic",
+                            injector=FaultInjector(5, alloc_fail_rate=0.1))
+    reqs = factory()
+    for r in reqs:
+        eng.submit(r)
+    eng.run(5000)
+    assert all(r.status == "done" for r in reqs)
+    assert sum(r.preemptions for r in reqs) > 0
+    assert [r.out for r in reqs] == [r.out for r in ref_reqs]
+    assert eng.pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Property-style: random arrivals + injected pool pressure (spy backend)
+# ---------------------------------------------------------------------------
+
+
+class _FaultySpy(FaultyEngine):
+    """Fault-injecting dense backend that records every unified tick."""
+
+    def __init__(self, *args, **kw):
+        self.tick_log = []
+        super().__init__(*args, **kw)
+
+    def _unified_tick(self, tokens, pos, seq_lens):
+        self.tick_log.append((
+            [r.rid if r is not None else None for r in self.active],
+            np.asarray(pos).copy(),
+            np.asarray(seq_lens).copy(),
+        ))
+        return super()._unified_tick(tokens, pos, seq_lens)
+
+
+def test_random_arrivals_with_faults_keep_invariants(model_params):
+    """Seeded random arrivals through the spy backend with injected
+    allocation failures: no request in two slots at once, the per-tick
+    token budget holds, writes stay inside the cache, every request
+    reaches a terminal state, and preempted requests' outputs match the
+    same workload served without faults. (Slot *migration* across
+    preemptions is legal — the no-migration invariant only holds within
+    one admission epoch, unlike the fault-free scheduler test.)"""
+    model, params = model_params
+    slots, budget = 3, 6
+
+    def factory():
+        rng = np.random.default_rng(3)
+        return rng, _workload(rng, rng.integers(2, 21, size=10),
+                              rng.integers(2, 9, size=10))
+
+    # fault-free pass: the output yardstick for the same arrival schedule
+    rng, base_reqs = factory()
+    base = Engine(model, params, slots=slots, max_len=MAX_LEN,
+                  prefill_chunk=5, max_tick_tokens=budget)
+    pending = list(base_reqs)
+    for _ in range(500):
+        for _ in range(int(rng.integers(0, 3))):
+            if pending:
+                base.submit(pending.pop(0))
+        base.step()
+        if not pending and all(r.done for r in base_reqs):
+            break
+    assert all(r.done for r in base_reqs)
+
+    rng, reqs = factory()
+    eng = _FaultySpy(model, params, slots=slots, max_len=MAX_LEN,
+                     prefill_chunk=5, max_tick_tokens=budget,
+                     injector=FaultInjector(11, alloc_fail_rate=0.2))
+    pending = list(reqs)
+    for _ in range(2000):
+        for _ in range(int(rng.integers(0, 3))):
+            if pending:
+                eng.submit(pending.pop(0))
+        eng.step()
+        if not pending and all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs)
+    assert sum(r.preemptions for r in reqs) > 0, "fault rate never triggered"
+    assert [r.out for r in reqs] == [r.out for r in base_reqs]
+
+    for rids, pos, seq_lens in eng.tick_log:
+        live = [r for r in rids if r is not None]
+        assert len(live) == len(set(live)), "request in two slots at once"
+        total = int(seq_lens.sum())
+        assert 1 <= total <= budget, f"tick token total {total} breaks budget"
+        for s in range(slots):
+            if rids[s] is None:
+                assert seq_lens[s] == 0
+            else:
+                assert int(pos[s]) + int(seq_lens[s]) <= MAX_LEN
+
+
+def test_paged_pool_drains_clean_under_faults(model_params):
+    """After a fault-ridden run every page is back on the free list, every
+    refcount is zero (bar the pinned null page), and the prefix cache holds
+    no entries for freed pages — the 'all pages freed at drain' invariant."""
+    model, params = model_params
+    eng = FaultyPagedEngine(model, params, slots=3, max_len=MAX_LEN,
+                            block_size=8, num_blocks=13,
+                            admission="optimistic", prefill_chunk=5,
+                            max_tick_tokens=12,
+                            injector=FaultInjector(2, alloc_fail_rate=0.15))
+    reqs = _mixed(np.random.default_rng(17), n=10)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(5000)
+    assert all(r.done for r in reqs)
+    pool = eng.pool
+    assert pool.pages_in_use == 0
+    assert sorted(pool._free) == list(range(1, pool.num_blocks))
+    assert pool.refcount[0] == 1 and not pool.refcount[1:].any()
+    assert not pool._key_to_block and not pool._block_key
+    assert (pool.block_tables == 0).all() and not pool.n_blocks.any()
+
+
+# ---------------------------------------------------------------------------
+# Deadlines & cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_deadline_expires_queued_request(model_params):
+    """A request that cannot reach its first token in time dies with status
+    deadline_missed, the survivor completes, and the counter records it."""
+    model, params = model_params
+    rng = np.random.default_rng(0)
+    eng = Engine(model, params, slots=1, max_len=MAX_LEN)
+    a = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 10).astype(np.int32),
+                max_new=12)
+    b = Request(rid=1, prompt=rng.integers(0, CFG.vocab, 10).astype(np.int32),
+                max_new=4, ttft_deadline_ms=5.0)
+    for r in (a, b):
+        eng.submit(r)
+    eng.run(200)
+    assert a.status == "done"
+    assert b.status == "deadline_missed" and b.done and not b.out
+    assert eng.stats.deadline_missed == 1
+
+
+def test_total_deadline_kills_live_request_and_frees_pages(model_params):
+    """A live request crossing its total deadline mid-decode is torn down
+    at the next tick boundary and its pages return to the pool at once."""
+    model, params = model_params
+    rng = np.random.default_rng(1)
+    eng = PagedEngine(model, params, slots=1, max_len=MAX_LEN, block_size=8)
+    # whole-prompt admission charges prompt tokens to the clock, so a 20
+    # token prompt + a few decode ticks blows a 30-unit total budget
+    req = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 20).astype(np.int32),
+                  max_new=16, total_deadline_ms=30.0)
+    eng.submit(req)
+    eng.run(200)
+    assert req.status == "deadline_missed" and req.done
+    assert 0 < len(req.out) < 16  # produced some tokens, then expired
+    assert eng.pool.pages_in_use == 0
+
+
+def test_deadline_on_modeled_clock_is_deterministic(model_params):
+    """Same workload, same deadlines -> same outcome set, twice over: the
+    modeled clock (not wall time) decides expiry."""
+    model, params = model_params
+
+    def outcome():
+        rng = np.random.default_rng(4)
+        eng = Engine(model, params, slots=2, max_len=MAX_LEN,
+                     prefill_chunk=4, max_tick_tokens=8)
+        reqs = _mixed(rng, n=6)
+        for i, r in enumerate(reqs):
+            r.ttft_deadline_ms = 70.0 if i % 2 else None
+            r.total_deadline_ms = 450.0
+            eng.submit(r)
+        eng.run(2000)
+        assert all(r.done for r in reqs)
+        return [r.status for r in reqs]
+
+    first = outcome()
+    assert first == outcome()
+    assert "deadline_missed" in first and "done" in first
+
+
+def test_cancel_queued_and_live(model_params):
+    model, params = model_params
+    rng = np.random.default_rng(2)
+    eng = PagedEngine(model, params, slots=1, max_len=MAX_LEN, block_size=8)
+    a = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 20).astype(np.int32),
+                max_new=12)
+    b = Request(rid=1, prompt=rng.integers(0, CFG.vocab, 10).astype(np.int32),
+                max_new=4)
+    for r in (a, b):
+        eng.submit(r)
+    eng.step()  # a live, b queued
+    assert eng.pool.pages_in_use > 0
+    assert eng.cancel(1) and b.status == "cancelled" and b.done
+    assert eng.cancel(0) and a.status == "cancelled" and a.done
+    assert eng.pool.pages_in_use == 0, "cancel must free pages immediately"
+    assert not eng.cancel(0), "terminal request is not cancellable again"
+    assert not eng.cancel(99), "unknown rid"
+    eng.run(50)  # no-op: nothing left
+    assert eng.stats.cancelled == 2 and eng.stats.finished == 0
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_rejects_overflow(model_params):
+    model, params = model_params
+    rng = np.random.default_rng(6)
+    eng = Engine(model, params, slots=1, max_len=MAX_LEN, max_queue=2)
+    reqs = _workload(rng, [8] * 5, [2] * 5)
+    oks = [eng.submit(r) for r in reqs]
+    assert oks == [True, True, False, False, False]
+    assert all(r.status == "rejected" and r.done for r in reqs[2:])
+    eng.run(100)
+    assert all(r.status == "done" for r in reqs[:2])
+    assert eng.stats.rejected == 3
+
+
+def test_shed_oldest_queued_policy(model_params):
+    """shed-oldest-queued sacrifices the stalest queued request in favor of
+    the newest arrival; the new submit itself succeeds."""
+    model, params = model_params
+    rng = np.random.default_rng(8)
+    eng = Engine(model, params, slots=1, max_len=MAX_LEN, max_queue=2,
+                 shed_policy="shed-oldest-queued")
+    reqs = _workload(rng, [8] * 4, [2] * 4)
+    oks = [eng.submit(r) for r in reqs]
+    assert oks == [True, True, True, True]
+    assert reqs[0].status == "rejected" and reqs[1].status == "rejected"
+    eng.run(100)
+    assert reqs[2].status == "done" and reqs[3].status == "done"
+    assert eng.stats.rejected == 2
+
+
+def test_shed_policy_validation(model_params):
+    model, params = model_params
+    with pytest.raises(ValueError, match="shed_policy"):
+        Engine(model, params, slots=1, max_len=32, shed_policy="drop-table")
+    with pytest.raises(ValueError, match="admission"):
+        PagedEngine(model, params, slots=1, max_len=32, admission="yolo")
+
+
+# ---------------------------------------------------------------------------
+# Pool rollback atomicity (reserve-then-commit)
+# ---------------------------------------------------------------------------
+
+
+def _pool_state(pool: PagedKVPool):
+    return (
+        list(pool._free),
+        pool.refcount.copy(),
+        pool.block_tables.copy(),
+        pool.n_blocks.copy(),
+        dict(pool._key_to_block),
+        dict(pool._block_key),
+        pool.prefix_hits,
+        pool.prompt_blocks,
+    )
+
+
+def _assert_state_equal(a, b):
+    assert a[0] == b[0]  # free list, order included
+    assert (a[1] == b[1]).all() and (a[2] == b[2]).all() and (a[3] == b[3]).all()
+    assert a[4] == b[4] and a[5] == b[5] and a[6] == b[6] and a[7] == b[7]
+
+
+def test_failed_multiblock_alloc_rolls_back():
+    """A multi-block alloc_prompt that cannot fit must leave the pool
+    byte-identical — no pinned refcounts, no half-filled block table."""
+    pool = PagedKVPool(num_blocks=5, block_size=4, slots=2, max_blocks=8)
+    pool.alloc_prompt(0, np.arange(8, dtype=np.int32))  # 2 of 4 pages
+    before = _pool_state(pool)
+    with pytest.raises(PoolExhausted, match="exhausted"):
+        # needs 3 fresh pages (12 tokens), only 2 free
+        pool.alloc_prompt(1, np.arange(100, 112, dtype=np.int32))
+    _assert_state_equal(_pool_state(pool), before)
+    # and the survivor still works: the slot can be freed cleanly
+    released = pool.free(0)
+    assert len(released) == 2 and pool.pages_in_use == 0
+
+
+def test_failed_alloc_with_prefix_hits_rolls_back():
+    """Rollback must also hold when the failing alloc would have reused
+    prefix pages: planned reuse takes no refcount until commit."""
+    pool = PagedKVPool(num_blocks=4, block_size=4, slots=2, max_blocks=8)
+    prompt = np.arange(8, dtype=np.int32)
+    pool.alloc_prompt(0, prompt)  # registers 2 full blocks
+    before = _pool_state(pool)
+    with pytest.raises(PoolExhausted, match="exhausted"):
+        # shares 2 blocks, then needs 2 fresh pages with only 1 free
+        pool.alloc_prompt(1, np.concatenate([prompt, np.arange(50, 57)]).astype(np.int32))
+    _assert_state_equal(_pool_state(pool), before)
+
+
+def test_ensure_writable_failure_rolls_back():
+    pool = PagedKVPool(num_blocks=3, block_size=4, slots=1, max_blocks=4)
+    pool.alloc_prompt(0, np.arange(8, dtype=np.int32))
+    before = _pool_state(pool)
+    with pytest.raises(PoolExhausted, match="exhausted"):
+        pool.ensure_writable(0, 8)  # next block, free list empty
+    _assert_state_equal(_pool_state(pool), before)
+
+
+def test_faulty_pool_injection_preserves_state():
+    """Injected failures honor the same all-or-nothing contract as real
+    exhaustion (the injector raises before delegating)."""
+    inj = FaultInjector(0, alloc_fail_rate=0.999)
+    pool = FaultyPool(8, 4, 2, 8, injector=inj)
+    before = _pool_state(pool)
+    with pytest.raises(PoolExhausted, match="injected"):
+        pool.alloc_prompt(0, np.arange(8, dtype=np.int32))
+    _assert_state_equal(_pool_state(pool), before)
+
+
+# ---------------------------------------------------------------------------
+# Trace & counters under preemption
+# ---------------------------------------------------------------------------
+
+
+def test_overload_trace_validates(model_params):
+    """A fault-ridden run's exported trace passes the preemption-aware
+    lifecycle checks in benchmarks.check_trace (same validator CI runs)."""
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.check_trace import validate
+
+    model, params = model_params
+    eng = FaultyPagedEngine(model, params, slots=2, max_len=MAX_LEN,
+                            block_size=8, num_blocks=13,
+                            admission="optimistic", prefill_chunk=5,
+                            max_tick_tokens=12,
+                            injector=FaultInjector(4, alloc_fail_rate=0.15))
+    reqs = _mixed(np.random.default_rng(23), n=8)
+    reqs[5].ttft_deadline_ms = 1e-9  # guaranteed miss: exercises that span
+    for r in reqs:
+        eng.submit(r)
+    eng.cancel(reqs[6].rid)  # cancelled-while-queued span
+    eng.run(5000)
+    assert all(r.done for r in reqs)
+    assert sum(r.preemptions for r in reqs) > 0
+    doc = eng.obs.tracer.export()
+    errors = validate(doc, min_requests=2)
+    assert not errors, "\n".join(errors)
