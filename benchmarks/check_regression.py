@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import re
 import sys
@@ -102,9 +103,17 @@ def directions(base: dict, cur: dict) -> tuple[set[str], set[str]]:
 
 
 def check_table(
-    table: str, base_dir: pathlib.Path, cur_dir: pathlib.Path, threshold: float
+    table: str,
+    base_dir: pathlib.Path,
+    cur_dir: pathlib.Path,
+    threshold: float,
+    records: list[dict] | None = None,
 ) -> tuple[list[str], bool]:
-    """Returns (human-readable failure strings, baseline-existed flag)."""
+    """Returns (human-readable failure strings, baseline-existed flag).
+
+    When ``records`` is given, every gated comparison is appended to it as
+    ``{table, row, metric, direction, baseline, current, delta, ok}`` —
+    the raw material for the CI step summary."""
     base_path = base_dir / f"BENCH_{table}.json"
     cur_path = cur_dir / f"BENCH_{table}.json"
     if not cur_path.exists():
@@ -156,20 +165,63 @@ def check_table(
             gated += 1
             if bv == 0.0:
                 # zero baselines (mismatch counters) gate on exact zero
-                if sign * cv > 0.0:
+                ok = not sign * cv > 0.0
+                if not ok:
                     failures.append(
                         f"{table}: {name}: {key} regressed from 0 to {cv:g}"
                     )
-                continue
-            rel = sign * (cv - bv) / abs(bv)
-            if rel > threshold:
-                failures.append(
-                    f"{table}: {name}: {key} regressed {rel * 100:.1f}% "
-                    f"(baseline {bv:g} -> current {cv:g}, "
-                    f"threshold {threshold * 100:.0f}%)"
-                )
+            else:
+                rel = sign * (cv - bv) / abs(bv)
+                ok = rel <= threshold
+                if not ok:
+                    failures.append(
+                        f"{table}: {name}: {key} regressed {rel * 100:.1f}% "
+                        f"(baseline {bv:g} -> current {cv:g}, "
+                        f"threshold {threshold * 100:.0f}%)"
+                    )
+            if records is not None:
+                records.append({
+                    "table": table, "row": name, "metric": key,
+                    "direction": "lower" if sign > 0 else "higher",
+                    "baseline": bv, "current": cv,
+                    "delta": (cv - bv) / abs(bv) if bv else None,
+                    "ok": ok,
+                })
     print(f"{table}: {gated} gated metrics, {len(failures)} regressions")
     return failures, True
+
+
+def write_step_summary(records: list[dict], failures: list[str]) -> None:
+    """Append a per-metric markdown table to ``$GITHUB_STEP_SUMMARY`` so the
+    gate's verdict is readable from the Actions run page without digging
+    through the job log. No-op outside CI (env var unset)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "## Benchmark regression gate",
+        "",
+        "| table | row | metric | direction | baseline | current | delta | ok |",
+        "|---|---|---|---|---:|---:|---:|:-:|",
+    ]
+    for r in records:
+        # zero baselines have no relative delta — they gate on exact zero
+        delta = "0-gate" if r["delta"] is None else f"{r['delta'] * 100:+.1f}%"
+        lines.append(
+            f"| {r['table']} | {r['row']} | {r['metric']} | {r['direction']} "
+            f"| {r['baseline']:g} | {r['current']:g} | {delta} "
+            f"| {'✅' if r['ok'] else '❌'} |"
+        )
+    if not records:
+        lines.append("_no gated metrics compared (baseline-establishing run?)_")
+    lines.append("")
+    verdict = "PASS" if not failures else f"**FAIL** ({len(failures)} problems)"
+    lines.append(f"Verdict: {verdict}")
+    for f in failures:
+        lines.append(f"- {f}")
+    lines.append("")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main() -> None:
@@ -186,9 +238,12 @@ def main() -> None:
     base_dir = pathlib.Path(args.baseline_dir)
     cur_dir = pathlib.Path(args.current_dir)
     failures: list[str] = []
+    records: list[dict] = []
     any_baseline = False
     for table in args.tables:
-        fails, had_baseline = check_table(table, base_dir, cur_dir, args.threshold)
+        fails, had_baseline = check_table(
+            table, base_dir, cur_dir, args.threshold, records
+        )
         failures += fails
         any_baseline = any_baseline or had_baseline
     if not any_baseline:
@@ -196,6 +251,7 @@ def main() -> None:
             f"no requested table has a baseline under {base_dir} — "
             "is --baseline-dir pointing at the committed BENCH_*.json files?"
         )
+    write_step_summary(records, failures)
     if failures:
         print("\nBENCHMARK REGRESSIONS:", file=sys.stderr)
         for f in failures:

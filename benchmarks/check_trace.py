@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 # float slack on microsecond timestamps (they come from integer ns / 1e3)
@@ -100,8 +101,7 @@ def _check_lifecycle(track: str, events: list[dict], errors: list[str]) -> bool:
         if arg_rid is not None and arg_rid != rid:
             errors.append(f"track {track!r}: event {ev['name']!r} carries "
                           f"rid={arg_rid}, expected {rid}")
-    terminals = [ev for ev in events
-                 if ev["ph"] == "i" and ev["name"] in TERMINALS]
+    terminals = [ev for ev in events if ev["ph"] == "i" and ev["name"] in TERMINALS]
     if len(terminals) != 1:
         errors.append(f"track {track!r}: expected exactly one terminal "
                       f"instant, got {[e['name'] for e in terminals]}")
@@ -149,14 +149,12 @@ def _check_lifecycle(track: str, events: list[dict], errors: list[str]) -> bool:
         if not _in_some(admitted, ev):
             errors.append(f"track {track!r}: preempted instant at "
                           f"{ev['ts']:.3f} outside every admitted span")
-    first_tok = [ev for ev in events
-                 if ev["ph"] == "i" and ev["name"] == "first_token"]
+    first_tok = [ev for ev in events if ev["ph"] == "i" and ev["name"] == "first_token"]
     if len(first_tok) != 1:
         errors.append(f"track {track!r}: expected exactly one first_token "
                       f"instant, got {len(first_tok)}")
     elif not _in_some(admitted, first_tok[0]):
-        errors.append(f"track {track!r}: first_token outside every admitted "
-                      f"span")
+        errors.append(f"track {track!r}: first_token outside every admitted span")
     for ev in events:
         if ev["ph"] == "X" and ev["name"].startswith("prefill_chunk["):
             if not _in_some(spans["prefill"], ev):
@@ -197,6 +195,38 @@ def validate(doc: dict, min_requests: int = 0) -> list[str]:
     return errors
 
 
+def _write_step_summary(trace: str, doc: dict, errors: list[str]) -> None:
+    """Append the validation verdict to ``$GITHUB_STEP_SUMMARY`` (one row
+    per invocation — the CI job validates several serve traces). No-op
+    outside CI (env var unset)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    events = [e for e in doc.get("traceEvents", []) if isinstance(e, dict)]
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    n_instants = sum(1 for e in events if e.get("ph") == "i")
+    tracks = {
+        e["args"]["name"]
+        for e in events
+        if e.get("ph") == "M" and e.get("name") == "thread_name"
+    }
+    n_req = sum(1 for t in tracks if t.startswith("req:"))
+    verdict = "✅ valid" if not errors else f"❌ {len(errors)} problems"
+    lines = [
+        f"### Trace `{trace}`",
+        "",
+        f"- request tracks: {n_req} (of {len(tracks)} tracks)",
+        f"- spans: {n_spans}, instants: {n_instants}",
+        f"- verdict: {verdict}",
+    ]
+    lines += [f"  - {e}" for e in errors[:20]]
+    if len(errors) > 20:
+        lines.append(f"  - … and {len(errors) - 20} more")
+    lines.append("")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome trace-event JSON file")
@@ -207,14 +237,14 @@ def main() -> int:
     with open(args.trace) as f:
         doc = json.load(f)
     errors = validate(doc, min_requests=args.min_requests)
+    _write_step_summary(args.trace, doc, errors)
     if errors:
         for e in errors:
             print(f"TRACE INVALID: {e}", file=sys.stderr)
         return 1
     n_events = sum(1 for e in doc["traceEvents"] if e["ph"] != "M")
     n_tracks = sum(1 for e in doc["traceEvents"] if e["ph"] == "M")
-    print(f"trace OK: {n_events} events on {n_tracks} tracks "
-          f"({args.trace})")
+    print(f"trace OK: {n_events} events on {n_tracks} tracks ({args.trace})")
     return 0
 
 

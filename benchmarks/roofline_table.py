@@ -26,7 +26,8 @@ def main():
             t_step * 1e6,
             f"bottleneck={d['bottleneck']};t_comp={d['t_compute_s']:.4f};"
             f"t_mem={d['t_memory_s']:.4f};t_coll={d['t_collective_s']:.4f};"
-            f"roofline_frac={frac:.3f};useful_flops={ratio if ratio is None else round(ratio,3)};"
+            f"roofline_frac={frac:.3f};"
+            f"useful_flops={ratio if ratio is None else round(ratio, 3)};"
             f"peak_GiB={(d.get('peak_bytes_per_device') or 0)/2**30:.2f}",
         )
 

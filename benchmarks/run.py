@@ -33,6 +33,7 @@ from benchmarks import (
     table17_state_quant,
     table18_arrival_serving,
     table19_overload,
+    table20_device_loop,
     roofline_table,
 )
 
@@ -52,6 +53,7 @@ ALL = {
     "table17": table17_state_quant.main,
     "table18": table18_arrival_serving.main,
     "table19": table19_overload.main,
+    "table20": table20_device_loop.main,
     "roofline": roofline_table.main,
 }
 

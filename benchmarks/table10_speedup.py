@@ -43,7 +43,8 @@ def main():
             common.emit(
                 f"table10/int{bits}/{name}",
                 t_q,
-                f"fp16_us={t_fp16:.1f};speedup={t_fp16 / t_q:.2f}x;bytes_ratio={fp16_bytes / q_bytes:.2f}",
+                f"fp16_us={t_fp16:.1f};speedup={t_fp16 / t_q:.2f}x"
+                f";bytes_ratio={fp16_bytes / q_bytes:.2f}",
             )
 
     # correctness of the fused kernel at one real tile per bit width

@@ -43,7 +43,8 @@ def main():
             ratio = 100 * (1 - gib / fp_gib)
             common.emit(
                 f"table11/w{bits}g{group}", 0.0,
-                f"bits_formula={formula:.3f};bits_measured={meas:.3f};GiB={gib:.2f};compression={ratio:.1f}%",
+                f"bits_formula={formula:.3f};bits_measured={meas:.3f}"
+                f";GiB={gib:.2f};compression={ratio:.1f}%",
             )
 
 

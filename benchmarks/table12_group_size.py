@@ -19,7 +19,9 @@ def main():
     cal = common.calib()
     tokens = common.corpus()
     for group in (16, 32, 64, 128):
-        batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=5)
+        batches = synthetic.lm_batches(
+            tokens, common.BATCH, common.SEQ, ECFG.steps, seed=5
+        )
         (cfg_q, p_q, _), us = common.timed(
             efficient_qat, model.cfg, fp_params, cal, batches,
             bits=BITS, group=group, bcfg=BCFG, ecfg=ECFG,

@@ -38,7 +38,9 @@ def _requests(rng: np.random.Generator) -> list[Request]:
     return [
         Request(
             rid=i,
-            prompt=rng.integers(0, CFG.vocab, size=int(rng.integers(3, 24))).astype(np.int32),
+            prompt=rng.integers(0, CFG.vocab, size=int(rng.integers(3, 24))).astype(
+                np.int32
+            ),
             max_new=int(rng.integers(4, 16)),
         )
         for i in range(N_REQS)

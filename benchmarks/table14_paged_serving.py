@@ -96,7 +96,10 @@ def main():
         )
 
     # -- 1. paged is token-identical to dense on the mixed workload ----------
-    d_reqs, p_reqs = _requests(np.random.default_rng(0)), _requests(np.random.default_rng(0))
+    d_reqs, p_reqs = (
+        _requests(np.random.default_rng(0)),
+        _requests(np.random.default_rng(0)),
+    )
     _serve(dense(), d_reqs)
     peng = paged()
     _serve(peng, p_reqs)

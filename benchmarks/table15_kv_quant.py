@@ -47,7 +47,9 @@ def _requests(rng: np.random.Generator, vocab: int) -> list[Request]:
         else:
             prompt = rng.integers(0, vocab, size=int(rng.integers(4, 12)))
         reqs.append(
-            Request(rid=i, prompt=prompt.astype(np.int32), max_new=int(rng.integers(4, 16)))
+            Request(
+                rid=i, prompt=prompt.astype(np.int32), max_new=int(rng.integers(4, 16))
+            )
         )
     return reqs
 

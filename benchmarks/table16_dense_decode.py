@@ -40,9 +40,7 @@ def _requests(rng: np.random.Generator, vocab: int) -> list[Request]:
     for i in range(N_REQS):
         size = int(rng.integers(64, 100)) if i < 2 else int(rng.integers(4, 12))
         prompt = rng.integers(0, vocab, size=size).astype(np.int32)
-        reqs.append(
-            Request(rid=i, prompt=prompt, max_new=int(rng.integers(4, 16)))
-        )
+        reqs.append(Request(rid=i, prompt=prompt, max_new=int(rng.integers(4, 16))))
     return reqs
 
 

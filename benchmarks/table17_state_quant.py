@@ -52,9 +52,7 @@ TRAIN_STEPS = 120
 
 
 def _train(arch: str):
-    cfg = get_config(arch, smoke=True).replace(
-        dtype=jnp.float32, capacity_factor=16.0
-    )
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, capacity_factor=16.0)
     tokens = synthetic.markov_corpus(cfg.vocab, 30_000, seed=0)
     batches = (
         synthetic.add_modalities(b, cfg)
@@ -234,9 +232,7 @@ def main():
     hy_q8 = serve(_quant_cfg(cfg_hy, 8))
     hmism = sum(a != b for a, b in zip(hy_fp, hy_q8))
     assert hmism == 0, f"hybrid kv8+state8 greedy diverged on {hmism}/6 requests"
-    common.emit(
-        "table17/greedy_hybrid_kv8_state8", 0.0, f"greedy_mismatches={hmism}/6"
-    )
+    common.emit("table17/greedy_hybrid_kv8_state8", 0.0, f"greedy_mismatches={hmism}/6")
 
     # -- 5. recurrent-state drift curves (trained hybrid + xLSTM) ------------
     cfg_xl, params_xl, tokens_xl = _train("xlstm-1.3b")

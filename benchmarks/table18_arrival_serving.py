@@ -152,7 +152,10 @@ def main():
             ttft, makespan, wall = _arrival_serve(make(paged, chunked), reqs, arrivals)
             toks = sum(len(r.out) for r in reqs)
             tok_rate = toks / makespan * 1e3
-            name = f"{'paged' if paged else 'dense'}_{'chunked' if chunked else 'legacy'}"
+            name = (
+                f"{'paged' if paged else 'dense'}"
+                f"_{'chunked' if chunked else 'legacy'}"
+            )
             outs[paged, chunked] = [r.out for r in reqs]
             # percentiles via the registry's log-bucketed histogram (the
             # estimator the live engine's serve.ttft_ms uses), cross-checked
@@ -186,10 +189,10 @@ def main():
     # the modeled interactive-class tail TTFT, on both engines
     for paged in (False, True):
         eng = "paged" if paged else "dense"
-        mismatches = sum(
-            a != b for a, b in zip(outs[paged, False], outs[paged, True])
+        mismatches = sum(a != b for a, b in zip(outs[paged, False], outs[paged, True]))
+        assert mismatches == 0, (
+            f"{eng}: {mismatches}/{N_REQS} chunked requests diverged"
         )
-        assert mismatches == 0, f"{eng}: {mismatches}/{N_REQS} chunked requests diverged"
         common.emit(
             f"table18/{eng}_chunked_correct", 0.0, f"mismatches={mismatches}/{N_REQS}"
         )

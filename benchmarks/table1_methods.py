@@ -25,14 +25,20 @@ def main():
     for bits in (4, 2):
         group = 32
         cfg_r, p_r = quantize_rtn(model.cfg, fp_params, bits, group)
-        common.emit(f"table1/rtn_w{bits}", 0.0, f"ppl={common.eval_ppl(cfg_r, p_r):.3f}")
+        common.emit(
+            f"table1/rtn_w{bits}", 0.0, f"ppl={common.eval_ppl(cfg_r, p_r):.3f}"
+        )
 
         (cfg_g, p_g), us = common.timed(
             gptq_dense_model, model, fp_params, cal, QuantSpec(bits, group)
         )
-        common.emit(f"table1/gptq_w{bits}", us, f"ppl={common.eval_ppl(cfg_g, p_g):.3f}")
+        common.emit(
+            f"table1/gptq_w{bits}", us, f"ppl={common.eval_ppl(cfg_g, p_g):.3f}"
+        )
 
-        batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=7)
+        batches = synthetic.lm_batches(
+            tokens, common.BATCH, common.SEQ, ECFG.steps, seed=7
+        )
         (cfg_f, p_f, _), us = common.timed(
             efficient_qat, model.cfg, fp_params, cal, batches,
             bits=bits, group=group, bcfg=BCFG, ecfg=ECFG,

@@ -25,7 +25,9 @@ def main():
     (cfg_rtn, p_rtn), us = common.timed(quantize_rtn, cfg, fp_params, BITS, GROUP)
     common.emit("table5/none(RTN)", us, f"ppl={common.eval_ppl(cfg_rtn, p_rtn):.3f}")
 
-    (cfg_b, p_b), us = common.timed(run_block_ap, cfg, fp_params, cal, BITS, GROUP, BCFG)
+    (cfg_b, p_b), us = common.timed(
+        run_block_ap, cfg, fp_params, cal, BITS, GROUP, BCFG
+    )
     common.emit("table5/block_ap_only", us, f"ppl={common.eval_ppl(cfg_b, p_b):.3f}")
 
     batches = synthetic.lm_batches(tokens, common.BATCH, common.SEQ, ECFG.steps, seed=3)

@@ -34,7 +34,9 @@ def main():
             qspec(cfg_q), variant,
         )
         names = TRAINABLE_LEAVES[variant]
-        tr, _ = partition(fake, path_mask(fake, lambda p: p.rsplit("/", 1)[-1] in names))
+        tr, _ = partition(
+            fake, path_mask(fake, lambda p: p.rsplit("/", 1)[-1] in names)
+        )
         common.emit(
             f"table6/{variant}", us, f"ppl={ppl:.3f};trainable_per_block={count(tr)}"
         )

@@ -74,7 +74,10 @@ def input_specs(cfg: ModelConfig, shape_name: str, *, scale: float = 1.0) -> dic
                 "patches": _sds((b, cfg.n_vision_tokens, cfg.d_vision), jnp.bfloat16),
             }
         else:
-            batch = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+            batch = {
+                "tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+            }
         return {"batch": batch}
 
     if sh.kind == "prefill":

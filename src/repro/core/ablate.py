@@ -27,7 +27,10 @@ TRAINABLE_LEAVES = {
     "sz": ("s", "z"),
     "round": ("r",),
     "szround": ("s", "z", "r"),
-    "szW": ("w", "s", "z", "scale", "b", "conv_w", "conv_b", "A_log", "D", "rec", "bias", "router"),
+    "szW": (
+        "w", "s", "z", "scale", "b", "conv_w", "conv_b",
+        "A_log", "D", "rec", "bias", "router",
+    ),
 }
 
 
@@ -55,14 +58,18 @@ def variant_weight(p: dict, spec: QuantSpec, variant: str) -> jax.Array:
         return fake_quant(jax.lax.stop_gradient(w), s, z, spec)
     if variant == "clip":
         # positive multiplicative clip factor, =1 at init (c0 = 1)
-        s_eff = jax.lax.stop_gradient(s) * jax.nn.softplus(p["c"]) / jax.nn.softplus(1.0)
+        s_eff = (
+            jax.lax.stop_gradient(s) * jax.nn.softplus(p["c"]) / jax.nn.softplus(1.0)
+        )
         return fake_quant(
             jax.lax.stop_gradient(w), s_eff, jax.lax.stop_gradient(z), spec
         )
     if variant in ("round", "szround"):
         if variant == "round":
             s, z = jax.lax.stop_gradient(s), jax.lax.stop_gradient(z)
-        wg = group_reshape(jax.lax.stop_gradient(w), spec.group_size).astype(jnp.float32)
+        wg = group_reshape(jax.lax.stop_gradient(w), spec.group_size).astype(
+            jnp.float32
+        )
         rg = group_reshape(p["r"], spec.group_size)
         q = jnp.floor(wg / s) + _h(rg) + z
         q = jnp.clip(q, 0.0, float(spec.qmax))

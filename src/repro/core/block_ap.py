@@ -57,7 +57,9 @@ def _stacks(model: Model, params: Params, batch: dict):
     """Yield (stack_key, layout, h0, kv_src, causal) per quantizable stack."""
     cfg = model.cfg
     if cfg.family == "encdec":
-        src = batch["frames"].astype(cfg.dtype) @ params["frontend"]["w"].astype(cfg.dtype)
+        src = batch["frames"].astype(cfg.dtype) @ params["frontend"]["w"].astype(
+            cfg.dtype
+        )
         yield "enc", model.enc_layout, src, None, False
         # decoder handled by caller after the encoder is quantized
     else:
@@ -116,7 +118,9 @@ def block_ap(
 
         def recon_loss(train_p, frozen_p, h_in, tgt, kv):
             slot = merge(train_p, frozen_p)
-            out, _, _ = apply_period(slot, layout, cfg_q, h_in, kv_src=kv, causal=causal)
+            out, _, _ = apply_period(
+                slot, layout, cfg_q, h_in, kv_src=kv, causal=causal
+            )
             return jnp.mean(
                 jnp.square(out.astype(jnp.float32) - tgt.astype(jnp.float32))
             )
@@ -124,9 +128,7 @@ def block_ap(
         sample_slot = _tree_idx(q_layers, 0)
         mask = path_mask(sample_slot, pred)
         lr_scales_t, _ = partition(
-            jax.tree.map(
-                lambda _: 1.0, sample_slot
-            ),
+            jax.tree.map(lambda _: 1.0, sample_slot),
             mask,
         )
         # weights learn at lr_w; everything else trainable learns at lr_q
@@ -141,13 +143,17 @@ def block_ap(
 
         @jax.jit
         def train_step(train_p, frozen_p, opt_state, h_in, tgt, kv):
-            loss, grads = jax.value_and_grad(recon_loss)(train_p, frozen_p, h_in, tgt, kv)
+            loss, grads = jax.value_and_grad(recon_loss)(
+                train_p, frozen_p, h_in, tgt, kv
+            )
             updates, opt_state = opt.update(grads, opt_state, train_p)
             return apply_updates(train_p, updates), opt_state, loss
 
         @jax.jit
         def forward_full(slot, h_in, kv):
-            out, _, _ = apply_period(slot, layout, cfg_q, h_in, kv_src=kv, causal=causal)
+            out, _, _ = apply_period(
+                slot, layout, cfg_q, h_in, kv_src=kv, causal=causal
+            )
             return out
 
         h_cur = h0
@@ -190,7 +196,9 @@ def block_ap(
         h0 = embed(fp_params["embed"], calib["tokens"], cfg_fp.dtype)
         # recompute enc_out with quantized encoder params under cfg_q
         enc_params_q = out_params["enc"]
-        src = calib["frames"].astype(cfg_fp.dtype) @ fp_params["frontend"]["w"].astype(cfg_fp.dtype)
+        src = calib["frames"].astype(cfg_fp.dtype) @ fp_params["frontend"][
+            "w"
+        ].astype(cfg_fp.dtype)
 
         def enc_body(h, slot):
             h, _, _ = apply_period(slot, model_fp.enc_layout, cfg_q, h, causal=False)

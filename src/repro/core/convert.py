@@ -84,7 +84,9 @@ def fake_tree_to_quantized(params: Any, spec: QuantSpec, variant: str = "szW") -
             if "b" in p:
                 out["b"] = p["b"]
             return out
-        return fake_to_quantized({"w": w, "s": s, "z": z, **({"b": p["b"]} if "b" in p else {})}, spec)
+        return fake_to_quantized(
+            {"w": w, "s": s, "z": z, **({"b": p["b"]} if "b" in p else {})}, spec
+        )
 
     return _map_qlinears(params, one)
 

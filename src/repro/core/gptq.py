@@ -84,7 +84,9 @@ def gptq_dense_model(model_fp, fp_params, calib_batch, spec):
     cfg = model_fp.cfg
     assert cfg.family == "dense" and cfg.act == "swiglu", "GPTQ driver: dense/swiglu"
     h_heads, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    cfg_q = cfg.replace(mode="quantized", quant_bits=spec.bits, group_size=spec.group_size)
+    cfg_q = cfg.replace(
+        mode="quantized", quant_bits=spec.bits, group_size=spec.group_size
+    )
 
     def capture_block(slot, h):
         """FP forward of one block, returning per-linear inputs."""
@@ -102,7 +104,9 @@ def gptq_dense_model(model_fp, fp_params, calib_batch, spec):
         q = apply_rope(q, pos[None], cfg.rope_theta)
         k = apply_rope(k, pos[None], cfg.rope_theta)
         qg = q.reshape(b, s, kv, h_heads // kv, hd)
-        out = attn_mod._sdpa(qg, k, v, causal=True, q_pos=pos).reshape(b, s, h_heads * hd)
+        out = attn_mod._sdpa(qg, k, v, causal=True, q_pos=pos).reshape(
+            b, s, h_heads * hd
+        )
         caps["mixer/wo"] = out
         h = h + apply_linear(p["wo"], out, None, "fp")
         x2 = rmsnorm(slot["ln2"], h, cfg.norm_eps)
@@ -153,7 +157,9 @@ def gptq_dense_model(model_fp, fp_params, calib_batch, spec):
             out_layers = jax.tree.map(
                 lambda x: jnp.zeros((n_periods, *x.shape), x.dtype), q_slot
             )
-        out_layers = jax.tree.map(lambda st, sl: st.at[pidx].set(sl), out_layers, q_slot)
+        out_layers = jax.tree.map(
+            lambda st, sl: st.at[pidx].set(sl), out_layers, q_slot
+        )
 
     out = dict(fp_params)
     out["layers"] = {"s0": out_layers}

@@ -191,7 +191,9 @@ def state_dequantize(state: dict, bits: int, group: int = 0) -> dict:
         if f"{name}_s" in state:
             last = x.shape[-1] * (2 if bits == 4 else 1)
             g = state_group_for(last, group, name)
-            out[name] = kv_dequantize(x, state[f"{name}_s"], state[f"{name}_m"], bits, g)
+            out[name] = kv_dequantize(
+                x, state[f"{name}_s"], state[f"{name}_m"], bits, g
+            )
         else:
             out[name] = x  # kept full precision
     return out

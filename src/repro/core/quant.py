@@ -53,7 +53,8 @@ class QuantSpec:
             return 1
         if in_features % self.group_size:
             raise ValueError(
-                f"in_features={in_features} not divisible by group_size={self.group_size}"
+                f"in_features={in_features} not divisible by "
+                f"group_size={self.group_size}"
             )
         return in_features // self.group_size
 
@@ -96,7 +97,9 @@ def quantize(w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec) -> jax.A
     return jnp.clip(q, 0, spec.qmax).astype(jnp.int32)
 
 
-def dequantize(w_int: jax.Array, s: jax.Array, z: jax.Array, dtype=jnp.float32) -> jax.Array:
+def dequantize(
+    w_int: jax.Array, s: jax.Array, z: jax.Array, dtype=jnp.float32
+) -> jax.Array:
     """Eq. (2): Ŵ = (W_int - z) * s ; accepts grouped codes, returns (in, out).
 
     ``z`` is used as-is (integer zq after packing; continuous during E2E-QP's

@@ -8,7 +8,9 @@ from __future__ import annotations
 import numpy as np
 
 
-def markov_corpus(vocab: int, n_tokens: int, seed: int = 0, branching: int = 8) -> np.ndarray:
+def markov_corpus(
+    vocab: int, n_tokens: int, seed: int = 0, branching: int = 8
+) -> np.ndarray:
     """Each token has `branching` likely successors (sparse transition)."""
     rng = np.random.default_rng(seed)
     succ = rng.integers(0, vocab, size=(vocab, branching))
@@ -57,7 +59,9 @@ def add_modalities(batch: dict, cfg, seed: int = 2) -> dict:
     return out
 
 
-def eval_ppl(model, params, tokens: np.ndarray, batch: int, seq: int, n_batches: int = 4):
+def eval_ppl(
+    model, params, tokens: np.ndarray, batch: int, seq: int, n_batches: int = 4
+):
     """Held-out perplexity (the Tables 1-3 metric, on the synthetic corpus)."""
     import jax
     import numpy as _np

@@ -26,9 +26,7 @@ def _kernel(w_ref, s_ref, z_ref, o_ref, *, bits: int, group: int):
     o_ref[...] = ((q - z) * s).reshape(w.shape).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bits", "group", "bg", "bn", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("bits", "group", "bg", "bn", "interpret"))
 def fake_quant(
     w: jax.Array,
     s: jax.Array,

@@ -60,7 +60,9 @@ def quant_matmul(
 
 
 @partial(jax.jit, static_argnums=(3,))
-def fused_fake_quant(w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec) -> jax.Array:
+def fused_fake_quant(
+    w: jax.Array, s: jax.Array, z: jax.Array, spec: QuantSpec
+) -> jax.Array:
     """Forward-only fused quant-dequant (Block-AP eval path)."""
     return _fq_kernel.fake_quant(
         w, s.astype(jnp.float32), z.astype(jnp.float32),

@@ -170,9 +170,7 @@ def _kernel_quant(
         _scratch_finalize(o_ref, l_ref, acc_ref)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("kv_bits", "kv_group", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("kv_bits", "kv_group", "interpret"))
 def paged_attention(
     q: jax.Array,  # (B, K, G, hd) — one decode token per row
     k_pages: jax.Array,  # (num_blocks, block_size, K, hd | packed_dim)

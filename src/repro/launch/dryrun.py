@@ -311,8 +311,10 @@ def main():
             print(f"FAILED {tag}: {res['error']}", flush=True)
         out.write_text(json.dumps(res, indent=2, default=str))
         if "error" not in res:
+            peak = res["peak_bytes_per_device"]
             print(
-                f"  ok: compile={res['compile_s']}s peak={res['peak_bytes_per_device'] and res['peak_bytes_per_device']/2**30:.2f}GiB "
+                f"  ok: compile={res['compile_s']}s "
+                f"peak={peak and peak / 2**30:.2f}GiB "
                 f"t_comp={res['t_compute_s']:.4f}s t_mem={res['t_memory_s']:.4f}s "
                 f"t_coll={res['t_collective_s']:.4f}s bottleneck={res['bottleneck']}",
                 flush=True,

@@ -27,8 +27,17 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the k highest logits only (0 = full "
+                         "vocabulary; ignored under greedy)")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="device-resident decode: run up to N all-decode "
+                         "ticks per compiled lax.scan segment between host "
+                         "syncs (1 = per-tick host sampling, the legacy "
+                         "behavior; greedy streams are identical at any "
+                         "value)")
     ap.add_argument("--paged", action="store_true",
                     help="serve from the paged KV engine (block tables)")
     ap.add_argument("--block-size", type=int, default=16)
@@ -107,7 +116,8 @@ def main():
     obs = Telemetry(tracing=not args.no_trace)
     kw = dict(
         slots=args.slots, max_len=args.max_len,
-        temperature=args.temperature, eos_id=args.eos_id, seed=args.seed,
+        temperature=args.temperature, top_k=args.top_k,
+        eos_id=args.eos_id, seed=args.seed, sync_every=args.sync_every,
         prefill_chunk=args.prefill_chunk, max_tick_tokens=args.max_tick_tokens,
         max_queue=args.max_queue, shed_policy=args.shed_policy,
         obs=obs,

@@ -60,7 +60,8 @@ def main():
 
     def gen():
         for b in synthetic.lm_batches(tokens, args.batch, args.seq, args.steps, seed=1):
-            yield synthetic.add_modalities(b, cfg) if cfg.family in ("encdec", "vlm") else b
+            is_mm = cfg.family in ("encdec", "vlm")
+            yield synthetic.add_modalities(b, cfg) if is_mm else b
 
     loader = PrefetchLoader(gen(), mesh=mesh)
     tcfg = TrainConfig(
@@ -79,7 +80,9 @@ def main():
     else:
         params, log = trainer.fit(params, loader)
     losses = [e["loss"] for e in log if "loss" in e]
-    print(f"first loss={losses[0]:.4f}  last loss={losses[-1]:.4f}  steps={len(losses)}")
+    print(
+        f"first loss={losses[0]:.4f}  last loss={losses[-1]:.4f}  steps={len(losses)}"
+    )
     print("straggler events:", len(trainer.watchdog.events))
     print(trainer.steady_state_report())
     if args.trace_out:

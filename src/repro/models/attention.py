@@ -19,7 +19,9 @@ from repro.obs import profiler
 NEG_INF = -1e30
 
 
-def attn_init(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False, kv_dim: int | None = None) -> dict:
+def attn_init(
+    rng: jax.Array, cfg: ModelConfig, *, cross: bool = False, kv_dim: int | None = None
+) -> dict:
     h, k, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
     kv_in = kv_dim or d
     ks = jax.random.split(rng, 4)

@@ -92,7 +92,9 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.A
 
     # dispatch: (B,S,E,C) one-hot over capacity slots
     slot = jnp.einsum("bske,bske->bske", pos_in_expert, assign)  # zero where dropped
-    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=x.dtype) * assign[..., None].astype(x.dtype)
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=x.dtype) * assign[
+        ..., None
+    ].astype(x.dtype)
     dispatch = jnp.sum(slot_oh, axis=2)  # (B,S,E,C)
     combine = jnp.sum(
         slot_oh * gate_vals[..., None, None].astype(x.dtype), axis=2

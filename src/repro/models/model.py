@@ -84,7 +84,10 @@ _MIXER_INIT = {
 
 def _slot_init(rng: jax.Array, cfg: ModelConfig, desc: dict) -> Params:
     ks = jax.random.split(rng, 4)
-    p: Params = {"ln1": rmsnorm_init(cfg.d_model), "mixer": _MIXER_INIT[desc["mixer"]](ks[0], cfg)}
+    p: Params = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "mixer": _MIXER_INIT[desc["mixer"]](ks[0], cfg),
+    }
     if desc.get("cross_extra"):  # encdec decoder: self-attn + cross-attn
         p["lnx"] = rmsnorm_init(cfg.d_model)
         p["cross"] = attention.attn_init(ks[1], cfg)
@@ -158,7 +161,9 @@ def _apply_slot(
     if desc["ffn"] == "dense":
         h = h + ffn_mod.ffn_apply(p["ffn"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
     elif desc["ffn"] == "moe":
-        y, aux_moe = ffn_mod.moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+        y, aux_moe = ffn_mod.moe_apply(
+            p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps)
+        )
         h = h + y
         aux = aux + aux_moe
     if cache is None and not make_cache:
@@ -296,17 +301,24 @@ class Model:
     def _stack_init(self, rng, layout, n_periods) -> Params:
         def one_period(k):
             ks = jax.random.split(k, len(layout))
-            return {f"s{j}": _slot_init(ks[j], self.cfg, d) for j, d in enumerate(layout)}
+            return {
+                f"s{j}": _slot_init(ks[j], self.cfg, d) for j, d in enumerate(layout)
+            }
 
         return jax.vmap(one_period)(jax.random.split(rng, n_periods))
 
     def init(self, rng: jax.Array) -> Params:
         cfg = self.cfg
         ks = jax.random.split(rng, 5)
-        p: Params = {"embed": embed_init(ks[0], cfg), "final_norm": rmsnorm_init(cfg.d_model)}
+        p: Params = {
+            "embed": embed_init(ks[0], cfg),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
         if cfg.family == "encdec":
             p["frontend"] = {
-                "w": uniform_init(ks[3], (cfg.d_frontend, cfg.d_model), cfg.d_frontend**-0.5)
+                "w": uniform_init(
+                    ks[3], (cfg.d_frontend, cfg.d_model), cfg.d_frontend**-0.5
+                )
             }
             p["enc"] = self._stack_init(ks[1], self.enc_layout, self.n_enc)
             p["enc_norm"] = rmsnorm_init(cfg.d_model)
@@ -315,7 +327,9 @@ class Model:
             p["layers"] = self._stack_init(ks[1], self.layout, self.n_periods)
         if cfg.family == "vlm":
             p["projector"] = {
-                "w": uniform_init(ks[4], (cfg.d_vision, cfg.d_model), cfg.d_vision**-0.5)
+                "w": uniform_init(
+                    ks[4], (cfg.d_vision, cfg.d_model), cfg.d_vision**-0.5
+                )
             }
         return p
 
@@ -324,13 +338,17 @@ class Model:
     def _kv_src(self, params: Params, batch: dict) -> jax.Array | None:
         cfg = self.cfg
         if cfg.family == "vlm":
-            vis = batch["patches"].astype(cfg.dtype) @ params["projector"]["w"].astype(cfg.dtype)
+            vis = batch["patches"].astype(cfg.dtype) @ params["projector"][
+                "w"
+            ].astype(cfg.dtype)
             return lc(vis, "batch", None, "embed")
         return None
 
     def _encode(self, params: Params, batch: dict) -> jax.Array:
         cfg = self.cfg
-        src = batch["frames"].astype(cfg.dtype) @ params["frontend"]["w"].astype(cfg.dtype)
+        src = batch["frames"].astype(cfg.dtype) @ params["frontend"]["w"].astype(
+            cfg.dtype
+        )
         src = lc(src, "batch", "seq", "embed")
         h, _, _ = _run_stack(params["enc"], self.enc_layout, cfg, src, causal=False)
         return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
@@ -489,6 +507,79 @@ class Model:
             logits = logits_head(params["embed"], h_last, self.cfg)
         return logits[:, 0], new_cache
 
+    def decode_segment(
+        self, params: Params, cache: Params, tokens: jax.Array, pos,
+        done: jax.Array, out_remaining: jax.Array, row_ids: jax.Array,
+        block_tables: jax.Array | None = None, *,
+        n_ticks: int, sample_fn, eos_id: int | None, max_len: int,
+    ) -> tuple[Params, jax.Array, jax.Array, jax.Array]:
+        """Run ``n_ticks`` all-decode ticks inside one compiled ``lax.scan``
+        — the device-resident decode loop. Sampling, EOS / ``max_new`` /
+        capacity checks, and the per-slot done-flags all stay on device;
+        the host syncs once per segment instead of once per tick.
+
+        tokens: (B,) each live row's last generated token (the next input).
+        pos: (B,) per-row cache write position, as in :meth:`unified_step`.
+        done: (B,) bool — True rows are masked out: their ``seq_lens`` is 0
+          so the unified step drops their KV writes and their (garbage)
+          logits are discarded; their token/position carry unchanged. Idle
+          slots enter with ``done=True``.
+        out_remaining: (B,) tokens each row may still emit (``max_new``
+          minus tokens already emitted); reaching 0 sets the done-flag.
+        row_ids: (B,) int32 request ids, keying each row's PRNG draws.
+        sample_fn: ``(logits (B, V), row_ids (B,), new_pos (B,)) -> (B,)``
+          next tokens — the engine closes the jit-compatible sampler
+          (``repro.serve.sampler``) and its base PRNG key over this, keyed
+          per (request, write position) so draws are invariant to slot
+          assignment and segment length.
+        eos_id / max_len: lifecycle constants mirroring the scheduler's
+          ``_emit``: a row goes done on EOS, on exhausting
+          ``out_remaining``, or when its new position hits the cache
+          capacity cut-off (``pos >= max_len - 1``).
+
+        Returns ``(new_cache, toks (n_ticks, B), valid (n_ticks, B),
+        done (B,))``: ``toks[t, i]`` is row i's token from tick t, valid
+        where the row was still live entering that tick. Once a row's flag
+        sets, every later tick is a no-op for it — the host-side stream it
+        syncs is exactly the per-tick (``sync_every=1``) stream.
+
+        Families with recurrent mixers run through ``decode_step`` (sq=1),
+        which ignores ``seq_lens`` — a done row keeps rewriting its own
+        state at a fixed position. Harmless: the row's outputs are
+        discarded, nothing else reads its slot, and the slot is reset
+        before reuse.
+        """
+        row_ids = jnp.asarray(row_ids, jnp.int32)
+        eos = jnp.int32(-1 if eos_id is None else eos_id)
+        have_eos = eos_id is not None
+
+        def body(carry, _):
+            cache, tok, pos, done, rem = carry
+            seq_lens = jnp.where(done, 0, 1).astype(jnp.int32)
+            logits, cache = self.unified_step(
+                params, cache, tok[:, None], pos, seq_lens, block_tables
+            )
+            new_pos = pos + seq_lens
+            nxt = sample_fn(logits, row_ids, new_pos)
+            active = ~done
+            tok = jnp.where(active, nxt, tok)
+            rem = rem - seq_lens
+            hit_eos = (tok == eos) if have_eos else jnp.zeros_like(done)
+            done = done | (active & (hit_eos | (rem <= 0) | (new_pos >= max_len - 1)))
+            return (cache, tok, new_pos, done, rem), (tok, active)
+
+        carry = (
+            cache,
+            jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32),
+            jnp.asarray(done),
+            jnp.asarray(out_remaining, jnp.int32),
+        )
+        (cache, _, _, done, _), (toks, valid) = jax.lax.scan(
+            body, carry, None, length=n_ticks
+        )
+        return cache, toks, valid, done
+
     # -- cache construction ---------------------------------------------------
 
     def init_cache(
@@ -606,7 +697,9 @@ class Model:
             layout, n_per = self.layout, self.n_periods
 
         def stacked(x):
-            return jnp.broadcast_to(x[None], (n_per, *x.shape)).copy() if x is not None else None
+            if x is None:
+                return None
+            return jnp.broadcast_to(x[None], (n_per, *x.shape)).copy()
 
         one = {f"s{j}": slot_cache(d) for j, d in enumerate(layout)}
         return jax.tree.map(stacked, one)

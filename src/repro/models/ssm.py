@@ -62,7 +62,9 @@ def _ssm_inputs(p: dict, cfg: ModelConfig, xc: jax.Array):
     _, dtr, n = mamba_dims(cfg)
     proj = linear(p["x_proj"], xc, cfg).astype(jnp.float32)
     dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
-    dt = jax.nn.softplus(linear(p["dt_proj"], dt_raw.astype(xc.dtype), cfg).astype(jnp.float32))
+    dt = jax.nn.softplus(
+        linear(p["dt_proj"], dt_raw.astype(xc.dtype), cfg).astype(jnp.float32)
+    )
     return dt, bmat, cmat
 
 
@@ -135,9 +137,7 @@ def mamba_apply(
             return h_all[:, -1], y_c
 
         # unrolled in dry-run cost modules so every chunk is counted
-        h_last, y_chunks = jax.lax.scan(
-            chunk_body, h0, xs, unroll=not cfg.scan_layers
-        )
+        h_last, y_chunks = jax.lax.scan(chunk_body, h0, xs, unroll=not cfg.scan_layers)
         y = y_chunks.swapaxes(0, 1).reshape(b, s, di)
         new_state = {"h": h_last, "conv": conv_tail}
 

@@ -39,7 +39,8 @@ def mlstm_init(rng: jax.Array, cfg: ModelConfig) -> dict:
         "wq": linear_init(ks[1], cfg, d, d),
         "wk": linear_init(ks[2], cfg, d, d),
         "wv": linear_init(ks[3], cfg, d, d),
-        "gates": linear_init(ks[4], cfg, d, 2 * cfg.n_heads),  # i,f per head (FP-ish small)
+        # i,f per head (FP-ish small)
+        "gates": linear_init(ks[4], cfg, d, 2 * cfg.n_heads),
         "down": linear_init(ks[5], cfg, d, d),
     }
 
@@ -105,7 +106,13 @@ def mlstm_apply(
         def to_chunks(t):
             return t.reshape(b, nch, c, *t.shape[2:]).swapaxes(0, 1)
 
-        xs = (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(logf), to_chunks(logi))
+        xs = (
+            to_chunks(q),
+            to_chunks(k),
+            to_chunks(v),
+            to_chunks(logf),
+            to_chunks(logi),
+        )
 
         def body(carry, chunk):
             c_in, n_in = carry

@@ -32,7 +32,11 @@ def adamw(
 
     def init(params):
         zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
-        return {"step": jnp.zeros((), jnp.int32), "m": zeros, "v": jax.tree.map(jnp.copy, zeros)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+        }
 
     def update(grads, state, params):
         if clip_norm is not None:
@@ -57,7 +61,9 @@ def adamw(
             else jax.tree.map(lambda _: 1.0, params)
         )
         flat = jax.tree.map(one, grads, state["m"], state["v"], params, scales)
-        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        updates = jax.tree.map(
+            lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple)
+        )
         m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
         v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
         return updates, {"step": step, "m": m, "v": v}

@@ -16,7 +16,9 @@ def cosine(lr: float, total_steps: int, final_frac: float = 0.0):
     return fn
 
 
-def linear_warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+def linear_warmup_cosine(
+    lr: float, warmup: int, total_steps: int, final_frac: float = 0.1
+):
     cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
 
     def fn(step):

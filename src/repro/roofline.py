@@ -31,7 +31,10 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|s4|u4)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|s4|u4)"
+    r"\[([0-9,]*)\]"
+)
 
 
 def _shape_bytes(shape_str: str) -> float:
@@ -135,7 +138,9 @@ def active_params(cfg) -> float:
         dense_ffn = 3 * d * ff
     else:
         dense_ffn = 2 * d * ff
-    moe_active = (3 if cfg.act == "swiglu" else 2) * d * ff * cfg.top_k if cfg.n_experts else 0.0
+    moe_active = (
+        (3 if cfg.act == "swiglu" else 2) * d * ff * cfg.top_k if cfg.n_experts else 0.0
+    )
 
     fam = cfg.family
     if fam == "dense":
@@ -151,7 +156,9 @@ def active_params(cfg) -> float:
         n_mamba = cfg.n_layers - n_attn
         n_moe = cfg.n_layers // max(cfg.moe_every, 1)
         n_dense = cfg.n_layers - n_moe
-        return n_attn * attn + n_mamba * mamba + n_moe * moe_active + n_dense * dense_ffn
+        return (
+            n_attn * attn + n_mamba * mamba + n_moe * moe_active + n_dense * dense_ffn
+        )
     if fam == "vlm":
         return cfg.n_layers * (attn + dense_ffn)  # cross-attn ~ attn
     if fam == "ssm":

@@ -8,8 +8,9 @@ request lifecycle — lives in
 **backends** behind it: :class:`Engine` owns a dense ``(slots, max_len)``
 cache, the paged subclass swaps in the page pool, and both expose the same
 small hook surface (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` /
-``_on_prefill_done`` / ``_pre_tick`` / ``_unified_tick`` / ``_reset_slot``
-/ ``_sample`` / ``_sync_stats``) plus the jitted model calls. ``submit`` /
+``_on_prefill_done`` / ``_pre_tick`` / ``_unified_tick`` /
+``_decode_segment`` / ``_reset_slot`` / ``_sample`` / ``_sync_stats``)
+plus the jitted model calls. ``submit`` /
 ``step`` / ``run`` and the ``queue`` / ``active`` / ``pos`` views delegate
 to the scheduler, so engine users are unchanged.
 
@@ -45,10 +46,10 @@ greedy decoding (``temperature=0``) staggered admission is exactly
 equivalent to running each request alone at batch size 1 — and because
 chunk rows read their own freshly written (quantize-then-dequantize) KV
 exactly like later decode ticks do, greedy outputs are also invariant to
-the chunk partitioning at every ``kv_bits``. At ``temperature > 0`` the
-per-token *distributions* still match batch-1 serving, but sampled draws
-come from a single shared host RNG in slot-interleaved order, so concrete
-token sequences differ from a solo run with the same seed.
+the chunk partitioning at every ``kv_bits``. At ``temperature > 0`` draws
+are keyed per (request, write position) from the engine seed (see
+``repro.serve.sampler``), so they too are independent of batch
+composition, tick order, and ``sync_every``.
 
 Decode attention: all-decode ticks run the fused masked dense-decode kernel
 (``cfg.dense_decode_impl``: Pallas on TPU, pure-JAX reference elsewhere) —
@@ -65,14 +66,25 @@ quantize-on-write / dequantize-on-read inside the mixers — see
 ``benchmarks/table17_state_quant.py`` for the drift study behind its
 default-off setting.
 
-Sampling: greedy (``temperature=0``, the default) or softmax sampling at
-``temperature > 0`` with a host-side seeded generator. Generation stops at
-``max_new`` tokens, at cache capacity, or when ``eos_id`` is produced (the
-EOS token is appended to ``Request.out`` before the request is marked done).
+Sampling: greedy (``temperature=0``, the default), or temperature /
+``top_k`` categorical sampling — always through the jit-compatible device
+sampler (``repro.serve.sampler``), keyed per (request, write position) from
+the engine seed. Generation stops at ``max_new`` tokens, at cache
+capacity, or when ``eos_id`` is produced (the EOS token is appended to
+``Request.out`` before the request is marked done).
+
+Device-resident decode (``sync_every > 1``): between host syncs the
+scheduler hands the backend an all-decode **segment** —
+``_decode_segment`` runs up to ``sync_every`` ticks inside one compiled
+``Model.decode_segment`` ``lax.scan`` with on-device sampling and
+done-flags, and the host materializes the whole segment's tokens in a
+single sync. ``sync_every=1`` (the default) preserves the per-tick
+behavior exactly.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any
 
 import jax
@@ -81,6 +93,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.obs import Telemetry, profiler
+from repro.serve import sampler
 from repro.serve.scheduler import UnifiedScheduler
 
 Params = dict[str, Any]
@@ -147,6 +160,13 @@ class EngineStats:
     def tokens(self) -> int:
         """Total generated tokens (prefill sample + decode ticks)."""
         return int(self._reg.counter("serve.tokens").value)
+
+    @property
+    def host_syncs(self) -> int:
+        """Device->host logit/token materializations on the decode path —
+        one per tick at ``sync_every=1``, one per multi-tick segment under
+        device-resident decode (table20's headline metric)."""
+        return int(self._reg.counter("serve.host_syncs").value)
 
     @property
     def occupancy_sum(self) -> int:
@@ -219,8 +239,10 @@ class Engine:
         slots: int,
         max_len: int,
         temperature: float = 0.0,
+        top_k: int = 0,
         eos_id: int | None = None,
         seed: int = 0,
+        sync_every: int = 1,
         prefill_chunk: int = 0,
         max_tick_tokens: int = 0,
         admit_lookahead: int = 8,
@@ -240,9 +262,22 @@ class Engine:
         self._fresh = self._make_fresh()
         self.obs = obs or Telemetry()
         self.stats = EngineStats(self.obs.metrics)
-        self._rng = np.random.default_rng(seed)
+        self._sampler_cfg = sampler.SamplerConfig(
+            temperature=self.temperature, top_k=top_k
+        )
+        self._base_key = jax.random.PRNGKey(seed)
+        self._sample_one = jax.jit(partial(sampler.sample, self._sampler_cfg))
         self._unified = jax.jit(model.unified_step)
         self._prefill = jax.jit(model.prefill)
+        self._segment = jax.jit(
+            partial(
+                model.decode_segment,
+                sample_fn=self._segment_sample,
+                eos_id=eos_id,
+                max_len=max_len,
+            ),
+            static_argnames=("n_ticks",),
+        )
         if prefill_chunk and not model.supports_ragged_rows:
             # recurrent mixers scan every input position (padding can't be
             # masked out of the state update), so chunked ragged rows are
@@ -251,6 +286,7 @@ class Engine:
         self.sched = UnifiedScheduler(
             self,
             slots=slots,
+            sync_every=sync_every,
             prefill_chunk=prefill_chunk,
             max_tick_tokens=max_tick_tokens,
             admit_lookahead=admit_lookahead,
@@ -409,15 +445,22 @@ class Engine:
 
     # -- sampling ----------------------------------------------------------------
 
-    def _sample(self, logits_row: np.ndarray) -> int:
-        """Greedy at temperature 0, else temperature-scaled softmax sampling."""
-        if self.temperature <= 0.0:
-            return int(np.argmax(logits_row))
-        z = logits_row.astype(np.float64) / self.temperature
-        z -= z.max()
-        p = np.exp(z)
-        p /= p.sum()
-        return int(self._rng.choice(p.shape[0], p=p))
+    def _segment_sample(
+        self, logits: jax.Array, row_ids: jax.Array, new_pos: jax.Array
+    ) -> jax.Array:
+        """The ``sample_fn`` closed into the jitted decode segment: derive
+        each row's draw key from (request, write position) and sample the
+        whole batch on device."""
+        keys = jax.vmap(partial(sampler.fold_key, self._base_key))(row_ids, new_pos)
+        return sampler.sample_batch(self._sampler_cfg, logits, keys)
+
+    def _sample(self, logits_row: np.ndarray, *, rid: int, write_pos: int) -> int:
+        """Sample one token from a single logits row with the shared device
+        sampler, keyed per (request, write position) — the same key the
+        multi-tick segment derives for that token, so per-tick and
+        device-resident decode draw identical streams."""
+        key = sampler.fold_key(self._base_key, rid, write_pos)
+        return int(self._sample_one(jnp.asarray(logits_row), key))
 
     # -- unified tick ------------------------------------------------------------
 
@@ -439,6 +482,29 @@ class Engine:
                 jnp.asarray(seq_lens),
             )
         return logits
+
+    def _row_ids(self) -> np.ndarray:
+        """Per-slot request ids (0 for idle rows — masked out anyway),
+        keying each row's PRNG draws inside a segment."""
+        return np.asarray(
+            [req.rid if req is not None else 0 for req in self.sched.active],
+            np.int32,
+        )
+
+    def _decode_segment(
+        self, tokens: np.ndarray, done: np.ndarray, out_rem: np.ndarray,
+        n_ticks: int,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Run one device-resident decode segment (``n_ticks`` compiled
+        ticks with on-device sampling and done-row masking) and sync the
+        whole segment back in one host materialization. Returns host
+        ``(toks (n, B), valid (n, B), done (B,))``."""
+        with profiler.annotate("serve.decode_segment"):
+            self.cache, toks, valid, done = self._segment(
+                self.params, self.cache, tokens, self.sched.pos, done,
+                out_rem, self._row_ids(), n_ticks=n_ticks,
+            )
+        return np.asarray(toks), np.asarray(valid), np.asarray(done)
 
     def _sync_stats(self) -> None:
         """Backend-gauge refresh hook, driven by the scheduler's admission

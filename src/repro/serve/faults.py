@@ -98,7 +98,9 @@ class FaultyPool(PagedKVPool):
 
     def ensure_writable(self, slot, pos):
         if self.injector.alloc_fails():
-            raise PoolExhausted("injected ensure_writable failure (pool state unchanged)")
+            raise PoolExhausted(
+                "injected ensure_writable failure (pool state unchanged)"
+            )
         return super().ensure_writable(slot, pos)
 
 

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import profiler
 from repro.serve.engine import Engine, Params, Request
 from repro.serve.scheduler import PoolExhausted
 
@@ -141,7 +142,9 @@ class PagedKVPool:
 
     # -- prompt admission ------------------------------------------------------
 
-    def alloc_prompt(self, slot: int, tokens: np.ndarray, *, register: bool = True) -> int:
+    def alloc_prompt(
+        self, slot: int, tokens: np.ndarray, *, register: bool = True
+    ) -> int:
         """Assign pages to ``slot`` for a prompt. Leading full blocks whose
         chained content hash matches a live page are shared instead of
         allocated. Returns the number of leading positions whose KV already
@@ -324,7 +327,9 @@ class PagedEngine(Engine):
     def _make_pool(self) -> PagedKVPool:
         """Pool-constructor hook (fault injection wraps it; see
         :mod:`repro.serve.faults`)."""
-        return PagedKVPool(self.num_blocks, self.block_size, self.slots, self.max_blocks)
+        return PagedKVPool(
+            self.num_blocks, self.block_size, self.slots, self.max_blocks
+        )
 
     def _make_cache(self) -> Params:
         return self.model.init_cache(
@@ -370,7 +375,8 @@ class PagedEngine(Engine):
             # so optimistic admission can thrash but never livelock.
             need_now = max(-(-len(req.prompt) // self.block_size), 1) + 1
             return self.pool.free_pages >= need_now
-        return (self.num_blocks - 1) - int(self._reserved.sum()) >= self._pages_needed(req)
+        free = (self.num_blocks - 1) - int(self._reserved.sum())
+        return free >= self._pages_needed(req)
 
     def _on_admit(self, slot: int, req: Request) -> int:
         """Chunked admission: reserve the slot's worst-case page budget and
@@ -490,6 +496,22 @@ class PagedEngine(Engine):
             jnp.asarray(self.pool.block_tables),
         )
         return logits
+
+    def _decode_segment(
+        self, tokens: np.ndarray, done: np.ndarray, out_rem: np.ndarray,
+        n_ticks: int,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Device-resident segment over the paged pool: the block tables
+        are uploaded **once per segment** — the scheduler's ``_pre_tick``
+        already reserved and made writable every page the segment can
+        touch, so the tables are frozen for its whole duration."""
+        with profiler.annotate("serve.decode_segment"):
+            self.cache, toks, valid, done = self._segment(
+                self.params, self.cache, tokens, self.sched.pos, done,
+                out_rem, self._row_ids(),
+                jnp.asarray(self.pool.block_tables), n_ticks=n_ticks,
+            )
+        return np.asarray(toks), np.asarray(valid), np.asarray(done)
 
     def _apply_copies(self, copies: list[tuple[int, int]]) -> None:
         """Apply copy-on-write page copies device-side (all layers at once)."""

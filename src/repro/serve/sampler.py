@@ -1,0 +1,115 @@
+"""Device-side token sampling for the serving engines (jit-compatible).
+
+The engines used to sample on host (``np.argmax`` / host-RNG softmax over a
+logits row synced back every tick), which pinned the decode loop to one
+host round-trip per token. This module is the replacement: a pure-jax
+sampler that runs inside the jitted tick — and inside the multi-tick
+``lax.scan`` decode segments (``Model.decode_segment``) — so token
+selection, EOS checks, and the done-flags all stay device-resident
+between host syncs.
+
+Determinism: stochastic sampling is keyed **per (request, position)** via
+:func:`fold_key` over the engine's base PRNG key, not drawn from a shared
+sequential RNG. The draw for a given request token therefore depends only
+on ``(seed, rid, write position)`` — independent of slot assignment,
+batch composition, tick order, segment length (``sync_every``), and
+host/device sync timing. The same seed replays the same streams, and a
+recomputed (preempted) request re-draws exactly the tokens it lost.
+
+Greedy (``temperature <= 0``) is ``argmax`` — bitwise the same reduction
+on host and device for a given logits row, which is what the
+``sync_every`` identity guarantees in the scheduler build on.
+
+:func:`host_probs` / :func:`host_sample` are the numpy reference
+implementation the parity tests compare against (exact for greedy,
+distribution-level for temperature / top-k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Static sampling policy, closed over by the jitted tick/segment.
+
+    temperature: ``<= 0`` selects greedy argmax; ``> 0`` scales logits
+      before the categorical draw.
+    top_k: keep only the ``k`` highest logits before sampling (``0`` =
+      full vocabulary). Ignored under greedy. Ties *at* the k-th logit
+      are all kept (the mask is a value threshold, not an index cut), so
+      the kept set is well-defined regardless of sort order.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 = full vocabulary)")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def fold_key(base: jax.Array, rid, pos) -> jax.Array:
+    """Derive the draw key for request ``rid``'s token at position ``pos``.
+
+    ``pos`` is the cache position the sampled token will occupy (the
+    row's write position *after* the tick that produced its logits) —
+    an absolute index into the request's token stream — so a recomputed
+    prefix re-derives the same keys and a preempted request re-draws its
+    lost tokens identically, in whatever slot it lands.
+    """
+    return jax.random.fold_in(jax.random.fold_in(base, rid), pos)
+
+
+def sample(cfg: SamplerConfig, logits: jax.Array, key: jax.Array) -> jax.Array:
+    """Sample one token from a single ``(V,)`` logits row -> int32 scalar."""
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    z = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(z, cfg.top_k)[0][..., -1]
+        z = jnp.where(z < kth, -jnp.inf, z)
+    return jax.random.categorical(key, z).astype(jnp.int32)
+
+
+def sample_batch(cfg: SamplerConfig, logits: jax.Array, keys: jax.Array) -> jax.Array:
+    """Row-wise :func:`sample` over ``(B, V)`` logits with ``(B, 2)`` keys."""
+    return jax.vmap(partial(sample, cfg))(logits, keys)
+
+
+def host_probs(cfg: SamplerConfig, logits: np.ndarray) -> np.ndarray:
+    """The categorical distribution the device sampler draws from, computed
+    in float64 numpy — the test oracle for distribution-level parity."""
+    z = np.asarray(logits, np.float64)
+    if cfg.greedy:
+        p = np.zeros(z.shape[-1])
+        p[np.argmax(z)] = 1.0
+        return p
+    z = z / cfg.temperature
+    if cfg.top_k > 0:
+        kth = np.sort(z)[-cfg.top_k]
+        z = np.where(z < kth, -np.inf, z)
+    z = z - z.max()
+    p = np.exp(z)
+    return p / p.sum()
+
+
+def host_sample(
+    cfg: SamplerConfig, logits: np.ndarray, rng: np.random.Generator
+) -> int:
+    """Host reference sampler (numpy RNG): same distribution as
+    :func:`sample`, different draw mechanics — exact match for greedy,
+    distribution-level for stochastic configs."""
+    p = host_probs(cfg, logits)
+    if cfg.greedy:
+        return int(np.argmax(p))
+    return int(rng.choice(p.shape[-1], p=p))

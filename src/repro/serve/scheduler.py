@@ -12,9 +12,9 @@ Layering (after the PR-6 refactor):
 * ``Engine`` / ``PagedEngine`` are thin **backends** behind it: they own the
   cache buffers and the jitted model calls, and expose a small hook surface
   (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` / ``_pre_tick`` /
-  ``_unified_tick`` / ``_reset_slot`` / ``_sample`` / ``_sync_stats`` /
-  ``_tick_penalty``). Dense-cache vs paged-pool allocation is the only real
-  divergence between them.
+  ``_unified_tick`` / ``_decode_segment`` / ``_reset_slot`` / ``_sample``
+  / ``_sync_stats`` / ``_tick_penalty``). Dense-cache vs paged-pool
+  allocation is the only real divergence between them.
 
 Two admission modes:
 
@@ -79,13 +79,37 @@ large one; among admissible requests, submit order is preserved.
   ``rejected`` instead of growing the queue without bound.
 
 **Modeled clock**: ``self.clock`` advances by ``tick_overhead +
-token_cost * (valid tokens)`` per tick (plus the backend's
-``_tick_penalty`` — fault injection models slow ticks through it), and by
-the prompt length for legacy whole-prompt prefills. It is a deterministic
+token_cost * (valid tokens)`` per **host sync** (plus the backend's
+``_tick_penalty``, drawn once per effective tick — fault injection models
+slow ticks through it), and by the prompt length for legacy whole-prompt
+prefills. ``tick_overhead`` models the host-side cost of a sync
+(scheduling, sampling bookkeeping, the device round-trip), so at
+``sync_every=1`` the clock is exactly the historical per-tick formula,
+and a multi-tick segment pays it once — the modeled win the device loop
+exists for (``benchmarks/table20_device_loop.py`` gates it). It is a deterministic
 function of the schedule — the same clock the arrival benchmarks gate on —
 which makes deadline behavior reproducible and CI-testable, unlike
 wall-clock on a shared runner. Callers may advance it across idle gaps
 with :meth:`advance_clock`.
+
+**Device-resident decode** (``sync_every > 1``): when a tick plans out as
+pure decode (no prefill chunks pending), the scheduler hands the backend a
+**segment** of up to ``sync_every`` ticks to run inside one compiled
+``lax.scan`` (``Model.decode_segment``): sampling, EOS / ``max_new`` /
+capacity checks, and per-slot done-flags all happen on device, finished
+rows are masked to no-ops (``seq_lens=0``) for the rest of the segment,
+and the host materializes the whole segment's tokens in a **single sync**.
+Admission, chunked-prefill scheduling, preemption, deadline expiry, and
+telemetry run only at segment boundaries. ``_pre_tick`` reserves every
+page the segment may touch *before* it launches, so pool exhaustion (and
+thus recompute preemption) can only happen between segments — a preempted
+request re-queues with exactly its host-synced tokens, and greedy streams
+stay byte-identical to ``sync_every=1`` on both engines. The costs of the
+coarser boundary: deadlines are checked (and cancellation observed) at
+segment granularity, per-tick time-between-token samples collapse to one
+per segment, and a mid-segment EOS leaves up to ``sync_every - 1`` masked
+no-op ticks of device work on the table. ``sync_every=1`` (the default)
+preserves the per-tick behavior exactly.
 
 **Telemetry** (``repro.obs``): the scheduler is the single writer of every
 serving counter and the emitter of the per-request lifecycle trace —
@@ -130,6 +154,7 @@ class UnifiedScheduler:
         backend: "Engine",
         *,
         slots: int,
+        sync_every: int = 1,
         prefill_chunk: int = 0,
         max_tick_tokens: int = 0,
         admit_lookahead: int = 8,
@@ -138,6 +163,8 @@ class UnifiedScheduler:
         tick_overhead: float = 2.0,
         token_cost: float = 1.0,
     ):
+        if sync_every < 1:
+            raise ValueError("sync_every must be >= 1 (1 = per-tick host sync)")
         if prefill_chunk < 0:
             raise ValueError("prefill_chunk must be >= 0 (0 = whole-prompt)")
         if max_tick_tokens < 0:
@@ -150,6 +177,7 @@ class UnifiedScheduler:
             raise ValueError(f"shed_policy must be one of {SHED_POLICIES}")
         self.backend = backend
         self.slots = slots
+        self.sync_every = sync_every
         self.prefill_chunk = prefill_chunk
         self.max_tick_tokens = max_tick_tokens
         self.admit_lookahead = admit_lookahead
@@ -388,9 +416,7 @@ class UnifiedScheduler:
         absorbed = len(req.prompt) - len(req.prompt0)
         fresh_out = req.out[absorbed:]
         if fresh_out:
-            req.prompt = np.concatenate(
-                [req.prompt, np.asarray(fresh_out, np.int32)]
-            )
+            req.prompt = np.concatenate([req.prompt, np.asarray(fresh_out, np.int32)])
         req.preemptions += 1
         req.status = "queued"
         self.active[slot] = None
@@ -433,19 +459,50 @@ class UnifiedScheduler:
                 budget_left -= n
         return decode_rows, chunks
 
+    def _seg_remaining(self, slot: int) -> int:
+        """Decode ticks slot can still run before its own lifecycle ends it:
+        ``max_new`` budget or the cache-capacity cut-off, whichever is
+        nearer (always >= 1 for a live decode row — a row at either limit
+        was released by the tick that put it there)."""
+        req = self.active[slot]
+        return min(
+            req.max_new - len(req.out),
+            self.backend.max_len - 1 - int(self.pos[slot]),
+        )
+
     def step(self) -> int:
-        """Expire deadlines, admit, then run one unified tick — preempting
-        the youngest-admitted victims if the backend cannot back the tick's
-        writes. Returns the number of valid tokens processed (decode rows +
-        prefill-chunk tokens) — the unit the modeled clock advances by."""
+        """Expire deadlines, admit, then run one unified tick — or, with
+        ``sync_every > 1`` and a pure-decode plan, one device-resident
+        multi-tick segment — preempting the youngest-admitted victims if
+        the backend cannot back the writes. Returns the number of valid
+        tokens processed (decode rows + prefill-chunk tokens) — the unit
+        the modeled clock advances by."""
         self._expire_deadlines()
         self._admit()
         while True:
             decode_rows, chunks = self._plan_tick()
             if not decode_rows and not chunks:
                 return 0
+            # segment length: pure-decode plans run up to sync_every ticks
+            # in one compiled call; capped by the longest row's remaining
+            # budget so the scan never runs all-masked tail ticks
+            seg = 1
+            if self.sync_every > 1 and not chunks:
+                seg = min(
+                    self.sync_every,
+                    max(self._seg_remaining(i) for i in decode_rows),
+                )
+            # reserve *every* position the segment may write before it
+            # launches: pool exhaustion (hence preemption) stays a
+            # segment-boundary event and re-queued requests hold only
+            # host-synced tokens
             writes = [
-                (i, int(self.pos[i]), int(chunks.get(i, 1)))
+                (
+                    i,
+                    int(self.pos[i]),
+                    int(chunks[i]) if i in chunks
+                    else min(seg, self._seg_remaining(i)),
+                )
                 for i in (*decode_rows, *chunks)
             ]
             try:
@@ -455,6 +512,8 @@ class UnifiedScheduler:
                     raise  # nothing left to preempt: genuinely oversized
                 continue  # re-plan without the victim and retry
             break
+        if seg > 1:
+            return self._step_segment(decode_rows, seg)
 
         # bucket the tick width: 1 for all-decode ticks, the full chunk
         # budget whenever any prefill row rides along (two jit shapes total)
@@ -489,6 +548,9 @@ class UnifiedScheduler:
         with tr.span("unified_step", track="sched"):
             logits = self.backend._unified_tick(tokens, self.pos, seq_lens)
         logits_np = np.asarray(logits)
+        # one device->host materialization per tick (the per-segment
+        # counterpart increments once per sync_every ticks — table20's metric)
+        met.counter("serve.host_syncs").inc()
 
         met.histogram("serve.tick_occupancy", "rows").observe(
             len(decode_rows) + len(chunks)
@@ -527,13 +589,84 @@ class UnifiedScheduler:
         )
         return n_tokens
 
+    def _step_segment(self, decode_rows: list[int], n_ticks: int) -> int:
+        """Run one device-resident decode segment (pure-decode plan, pages
+        already reserved by ``_pre_tick``): up to ``n_ticks`` compiled
+        ticks with on-device sampling and done-flags, one host sync, then
+        a boundary replay of the per-tick lifecycle — token appends,
+        counters, occupancy, releases — producing exactly the state a
+        ``sync_every=1`` run of the same ticks would have left behind.
+        Decode rows have already produced their first token, so no
+        first-token / TTFT event can fall inside a segment; TBT collapses
+        to one observation per row per segment."""
+        tr = self.obs.tracer
+        met = self.obs.metrics
+        tok = np.zeros(self.slots, np.int32)
+        done0 = np.ones(self.slots, bool)  # idle slots enter masked
+        out_rem = np.zeros(self.slots, np.int32)
+        for i in decode_rows:
+            req = self.active[i]
+            tok[i] = req.out[-1]
+            done0[i] = False
+            out_rem[i] = req.max_new - len(req.out)
+        tick_span = tr.begin(
+            "tick", track="sched",
+            decode_rows=len(decode_rows), prefill_rows=0,
+            prefill_tokens=0, width=1, segment=n_ticks,
+        )
+        self.backend._sync_stats()
+        with tr.span("decode_segment", track="sched", ticks=n_ticks):
+            toks, valid, done = self.backend._decode_segment(
+                tok, done0, out_rem, n_ticks
+            )
+        met.counter("serve.host_syncs").inc()
+        # replay per-tick occupancy: tick t ran valid[t].sum() live rows;
+        # once every row is done the remaining scan iterations are no-ops
+        eff_ticks = 0
+        for t in range(n_ticks):
+            occ = int(valid[t].sum())
+            if occ == 0:
+                break
+            eff_ticks += 1
+            met.histogram("serve.tick_occupancy", "rows").observe(occ)
+        n_tokens = 0
+        now = tr.now()
+        for i in decode_rows:
+            req = self.active[i]
+            mask = valid[:, i]
+            nv = int(mask.sum())  # >= 1: a live row always runs tick 0
+            req.out.extend(int(x) for x in toks[mask, i])
+            self.pos[i] += nv
+            n_tokens += nv
+            met.counter("serve.tokens").inc(nv)
+            lt = self._lt[req.rid]
+            if lt["t_last_tok"]:
+                met.histogram("serve.tbt_ms", "ms").observe(
+                    (now - lt["t_last_tok"]) / 1e6
+                )
+            lt["t_last_tok"] = now
+            if done[i]:
+                self._release(i, "done")
+        tr.end(tick_span)
+        met.histogram("serve.tick_ms", "ms").observe(
+            (tick_span.t1 - tick_span.t0) / 1e6 if tick_span.t1 else 0.0
+        )
+        self.backend._sync_stats()
+        penalty = sum(self.backend._tick_penalty() for _ in range(eff_ticks))
+        self.clock += self.tick_overhead + n_tokens * self.token_cost + penalty
+        return n_tokens
+
     def _emit(self, slot: int, logits_row: np.ndarray, *, capacity: bool) -> None:
         """Sample one token for ``slot`` and run the request lifecycle:
         EOS / ``max_new`` / (decode and recompute rows) cache-capacity
         cut-off. The single place a generated token is counted, for both
-        admission modes and both engines."""
+        admission modes and both engines. ``self.pos[slot]`` is the
+        position the sampled token will be written at, which (with the
+        request id) keys its PRNG draw (see ``repro.serve.sampler``)."""
         req = self.active[slot]
-        tok = self.backend._sample(logits_row)
+        tok = self.backend._sample(
+            logits_row, rid=req.rid, write_pos=int(self.pos[slot])
+        )
         req.out.append(tok)
         tr = self.obs.tracer
         met = self.obs.metrics
@@ -544,13 +677,9 @@ class UnifiedScheduler:
         if not lt["first_done"]:
             lt["first_done"] = True
             tr.instant("first_token", track=track, rid=req.rid)
-            met.histogram("serve.ttft_ms", "ms").observe(
-                (now - lt["t_submit"]) / 1e6
-            )
+            met.histogram("serve.ttft_ms", "ms").observe((now - lt["t_submit"]) / 1e6)
         elif lt["t_last_tok"]:
-            met.histogram("serve.tbt_ms", "ms").observe(
-                (now - lt["t_last_tok"]) / 1e6
-            )
+            met.histogram("serve.tbt_ms", "ms").observe((now - lt["t_last_tok"]) / 1e6)
         if "decode" not in lt:  # first token, or first after a recompute
             lt["decode"] = tr.begin("decode", track=track, rid=req.rid)
         lt["t_last_tok"] = now

@@ -61,7 +61,9 @@ class CheckpointManager:
     """save(step, tree) -> async write to <dir>/step_<n>/ ; restores latest
     *valid* checkpoint (manifest written last = commit marker)."""
 
-    def __init__(self, directory: str | pathlib.Path, keep: int = 3, async_write: bool = True):
+    def __init__(
+        self, directory: str | pathlib.Path, keep: int = 3, async_write: bool = True
+    ):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -135,7 +137,13 @@ class CheckpointManager:
             manifest = json.loads((path / "MANIFEST.json").read_text())
             with np.load(path / "arrays.npz") as z:
                 flat = dict(z)  # materialise: decompresses, catching torn zips
-        except (OSError, ValueError, KeyError, json.JSONDecodeError, zipfile.BadZipFile) as e:
+        except (
+            OSError,
+            ValueError,
+            KeyError,
+            json.JSONDecodeError,
+            zipfile.BadZipFile,
+        ) as e:
             log.warning("skipping torn checkpoint %s: %s", path.name, e)
             return None
         if manifest.get("n_arrays") != len(flat):
@@ -146,7 +154,9 @@ class CheckpointManager:
             return None
         return flat
 
-    def restore(self, like: Any, step: int | None = None, shardings: Any = None) -> tuple[Any, int]:
+    def restore(
+        self, like: Any, step: int | None = None, shardings: Any = None
+    ) -> tuple[Any, int]:
         """Restore into the structure of ``like``; optionally device_put with
         ``shardings`` (elastic resume onto a new mesh). With ``step=None``
         (the default) torn checkpoints are logged and skipped, walking back
@@ -173,4 +183,6 @@ class CheckpointManager:
         return tree
 
     def manifest(self, step: int) -> dict:
-        return json.loads((self.dir / f"step_{step:012d}" / "MANIFEST.json").read_text())
+        return json.loads(
+            (self.dir / f"step_{step:012d}" / "MANIFEST.json").read_text()
+        )

@@ -103,9 +103,7 @@ class Trainer:
             acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
             return acc, loss
 
-        zeros = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), train_p
-        )
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), train_p)
         # unroll when the model is in dry-run cost-accounting mode so the
         # microbatch loop is visible to XLA cost analysis (while bodies are
         # counted once otherwise)
@@ -143,8 +141,7 @@ class Trainer:
 
         tracer, met = self.obs.tracer, self.obs.metrics
         phase = "e2e_qp" if tcfg.trainable == "qparams" else "fp_train"
-        phase_span = tracer.begin(f"phase:{phase}", track="train",
-                                  steps=tcfg.steps)
+        phase_span = tracer.begin(f"phase:{phase}", track="train", steps=tcfg.steps)
         log: list[dict] = []
         good = (train_p, opt_state, 0)  # last known-good snapshot marker
         compiled = False  # first executed step pays the jit compile
@@ -153,8 +150,7 @@ class Trainer:
                 break
             compile_step = not compiled
             compiled = True
-            span = tracer.begin("step", track="train", step=i,
-                                compile=compile_step)
+            span = tracer.begin("step", track="train", step=i, compile=compile_step)
             t0 = time.time()
             with profiler.annotate(f"train.step[{i}]"):
                 train_p, opt_state, err_state, metrics = step_fn(
@@ -210,7 +206,8 @@ class Trainer:
             return f"compile_step={compile_ms:.0f}ms steady_steps=0"
         tok_s = met.counter("train.steady_tokens").value / (hist.sum / 1e3)
         return (
-            f"compile_step={compile_ms:.0f}ms steady_step p50={hist.percentile(50):.1f}ms "
+            f"compile_step={compile_ms:.0f}ms "
+            f"steady_step p50={hist.percentile(50):.1f}ms "
             f"p99={hist.percentile(99):.1f}ms throughput={tok_s:.0f} tok/s "
             f"({hist.count} steady steps)"
         )

@@ -68,6 +68,8 @@ def test_variant_trainables_have_gradients():
     for variant, leaf in (("clip", "c"), ("round", "r"), ("sz", "s")):
         p = add_variant_params(fp_to_fake(init_fp(KEY, 32, 8), spec), spec, variant)
         g = jax.grad(
-            lambda v: jnp.sum(jnp.square(variant_weight(dict(p, **{leaf: v}), spec, variant)))
+            lambda v: jnp.sum(
+                jnp.square(variant_weight(dict(p, **{leaf: v}), spec, variant))
+            )
         )(p[leaf])
         assert float(jnp.max(jnp.abs(g))) > 0, variant

@@ -19,7 +19,9 @@ def _batch(cfg, rng, s):
     if cfg.family == "encdec":
         batch["frames"] = jax.random.normal(ks[1], (B, S, cfg.d_frontend))
     elif cfg.family == "vlm":
-        batch["patches"] = jax.random.normal(ks[1], (B, cfg.n_vision_tokens, cfg.d_vision))
+        batch["patches"] = jax.random.normal(
+            ks[1], (B, cfg.n_vision_tokens, cfg.d_vision)
+        )
     return batch
 
 

@@ -83,8 +83,10 @@ def test_sharded_outputs_match_single_device():
         cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab),
-                 "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab)}
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab),
+        }
         loss1, _ = jax.jit(model.loss)(params, batch)
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))

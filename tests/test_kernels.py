@@ -97,6 +97,4 @@ def test_quant_matmul_gemv_and_ragged_m_vs_xla_dequant(bits, m):
     codes = packing.unpack(planes, bits, axis=0).reshape(k // group, group, n)
     w_hat = dequantize(codes, s, zq, jnp.float32)
     want = jnp.dot(x.astype(jnp.float32), w_hat)
-    np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
-    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

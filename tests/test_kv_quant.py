@@ -148,9 +148,7 @@ def test_paged_attention_quant_kernel_vs_ref(bits, shape):
     want = ref.paged_attention_quant_ref(
         q, kc, vc, bt, lengths, ks, km, vs, vm, bits, qgrp
     )
-    np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
-    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -284,9 +282,7 @@ def test_cross_kv8_greedy_matches_fp(arch):
     besides self-attn KV, which the dense parity suite already covers)."""
     from repro.configs import get_config
 
-    cfg = get_config(arch, smoke=True).replace(
-        dtype=jnp.float32, capacity_factor=16.0
-    )
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, capacity_factor=16.0)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = _modal_batch(cfg, jax.random.PRNGKey(1), 2, 16)

@@ -420,7 +420,9 @@ def test_failed_alloc_with_prefix_hits_rolls_back():
     before = _pool_state(pool)
     with pytest.raises(PoolExhausted, match="exhausted"):
         # shares 2 blocks, then needs 2 fresh pages with only 1 free
-        pool.alloc_prompt(1, np.concatenate([prompt, np.arange(50, 57)]).astype(np.int32))
+        pool.alloc_prompt(
+            1, np.concatenate([prompt, np.arange(50, 57)]).astype(np.int32)
+        )
     _assert_state_equal(_pool_state(pool), before)
 
 

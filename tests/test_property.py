@@ -47,7 +47,9 @@ def test_rtn_error_bounded_by_half_step(ws):
     s, z = init_qparams(w, spec)
     w_hat = dequantize(quantize(w, s, z, spec), s, z)
     err = np.abs(np.asarray(w_hat) - np.asarray(w))
-    bound = np.broadcast_to(np.asarray(s), (s.shape[0], w.shape[0] // s.shape[0], w.shape[1]))
+    bound = np.broadcast_to(
+        np.asarray(s), (s.shape[0], w.shape[0] // s.shape[0], w.shape[1])
+    )
     assert (err.reshape(bound.shape) <= bound * 0.51 + 1e-6).all()
 
 

@@ -79,8 +79,7 @@ def test_chunked_matches_whole_prompt(trained_params, engine_cls, kv_bits):
     model = Model(cfg)
 
     def serve(**kw):
-        eng = _make(engine_cls, model, trained_params,
-                    slots=2, max_len=MAX_LEN, **kw)
+        eng = _make(engine_cls, model, trained_params, slots=2, max_len=MAX_LEN, **kw)
         reqs = _workload(
             np.random.default_rng(7), (3, 9, 17, 24, 5, 12), (6, 5, 4, 3, 7, 4)
         )
@@ -293,9 +292,7 @@ def test_dense_and_paged_counters_do_not_drift(model_params, chunked):
         if chunked:
             kw.update(prefill_chunk=4, max_tick_tokens=8)
         eng = _make(engine_cls, model, params, **kw)
-        reqs = _workload(
-            np.random.default_rng(13), (3, 9, 17, 5, 12), (6, 5, 4, 7, 4)
-        )
+        reqs = _workload(np.random.default_rng(13), (3, 9, 17, 5, 12), (6, 5, 4, 7, 4))
         for r in reqs:
             eng.submit(r)
         eng.run(max_ticks=400)

@@ -87,9 +87,7 @@ def test_state_codec_4bit_packs_and_init_cache_shapes(bits):
     assert mamba["h"].shape == (1, 2, di, packed)
     # quantized init leaves are the exact codes of the fp init values
     fp_state = Model(HYBRID_CFG).init_cache(2, 16)["s1"]["mixer"]
-    want = state_quantize(
-        {k: v[0] for k, v in fp_state.items()}, bits, 0
-    )
+    want = state_quantize({k: v[0] for k, v in fp_state.items()}, bits, 0)
     for k, v in want.items():
         np.testing.assert_array_equal(np.asarray(mamba[k][0]), np.asarray(v))
 

@@ -84,7 +84,9 @@ def test_checkpoint_roundtrip_and_retention(tmp_path):
     assert ck.all_steps() == [2, 3]  # keep=2 retention
     restored, step = ck.restore(tree)
     assert step == 3
-    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(6).reshape(2, 3) * 3)
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.arange(6).reshape(2, 3) * 3
+    )
     assert restored["b"]["c"].dtype == jnp.bfloat16
     m = ck.manifest(3)
     assert m["step"] == 3 and m["n_arrays"] == 2
@@ -126,7 +128,9 @@ def test_serve_engine_matches_manual_decode(quantized_model):
     assert req.done and len(req.out) == 5
 
     # manual greedy loop
-    logits, cache = jax.jit(model.prefill)(q_params, {"tokens": jnp.asarray(prompt[None])})
+    logits, cache = jax.jit(model.prefill)(
+        q_params, {"tokens": jnp.asarray(prompt[None])}
+    )
     cache0 = model.init_cache(1, 64)
     cache0 = jax.tree.map(
         lambda c0, cp: jax.lax.dynamic_update_slice(
