@@ -34,6 +34,7 @@ from benchmarks import (
     table18_arrival_serving,
     table19_overload,
     table20_device_loop,
+    table21_sharded_serving,
     roofline_table,
 )
 
@@ -54,6 +55,7 @@ ALL = {
     "table18": table18_arrival_serving.main,
     "table19": table19_overload.main,
     "table20": table20_device_loop.main,
+    "table21": table21_sharded_serving.main,
     "roofline": roofline_table.main,
 }
 

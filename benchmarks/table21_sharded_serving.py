@@ -1,0 +1,176 @@
+"""Tensor-parallel sharded serving benchmark: per-shard KV footprint and
+modeled collective traffic for "one engine over a mesh" (the PR-10
+tentpole), with the identity guarantee gated at exactly zero.
+
+The harness process already imported jax on one device, so ``main()``
+re-executes this module in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set before the jax
+import; the child serves every leg and prints one JSON blob, the parent
+emits the gated rows.
+
+Per leg (dense@1x2, paged@1x2 at kv16; dense@1x8, paged@1x4 at kv8 — the
+low-bit pool shards its packed codes *and* qparam planes) the same greedy
+workload is served single-device and on the mesh and measures:
+
+* ``kv_shard_bytes`` — KV cache bytes resident per model shard (gated,
+                       lower is better). Hard-asserted to equal exactly
+                       ``kv_cache_bytes / model_shards``: the 1/shards
+                       scaling that makes caches bigger than one device
+                       servable.
+* ``coll_bytes_tick`` — modeled ring all-reduce bytes per device per decode
+                       tick (gated, lower is better): the two row-parallel
+                       psums per layer (attention out-proj, MLP down-proj)
+                       each move ``2 * (m-1)/m`` of a ``(B, d_model)``
+                       activation. Deterministic counterpart of the
+                       interconnect cost the mesh adds.
+* ``mismatches``     — requests whose greedy stream differs from the
+                       single-device run of the same engine (gated at
+                       exactly 0: sharding must be invisible in tokens).
+* ``leaked_pages``   — pages still allocated after drain on the sharded
+                       pool (paged legs; gated at exactly 0).
+* ``kv_total_mb``    — informational: the full (unsharded) cache size.
+
+    PYTHONPATH=src python -m benchmarks.table21_sharded_serving
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks import common
+
+_CHILD = "_TABLE21_CHILD"
+
+# legs: (engine, data, model, kv_bits)
+LEGS = (
+    ("dense", 1, 2, 16),
+    ("paged", 1, 2, 16),
+    ("dense", 1, 8, 8),
+    ("paged", 1, 4, 8),
+)
+
+
+def _child() -> None:
+    """Runs under 8 host devices: serve every leg, print one JSON line."""
+    import dataclasses
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.pipeline import pretrain_fp
+    from repro.data import synthetic
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models.common import ModelConfig
+    from repro.models.model import Model
+    from repro.serve.engine import Engine, Request
+    from repro.serve.paged_kv import PagedEngine
+
+    cfg0 = ModelConfig(
+        name="shard-bench", family="dense", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=8, d_ff=128, vocab=96, loss_chunk=32, kv_group=8,
+        dtype=jnp.float32,
+    )
+    tokens = synthetic.markov_corpus(cfg0.vocab, 20_000, seed=0)
+    _, params = pretrain_fp(
+        cfg0, synthetic.lm_batches(tokens, 8, 32, steps=80, seed=1), lr=3e-3
+    )
+    engines = {"dense": Engine, "paged": PagedEngine}
+    slots, max_len = 4, 64
+
+    def serve(ename, kv_bits, mesh):
+        cfg = cfg0 if kv_bits == 16 else dataclasses.replace(cfg0, kv_bits=kv_bits)
+        rng = np.random.default_rng(5)
+        reqs = [
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 14)))
+                .astype(np.int32),
+                max_new=(6, 10, 14)[i % 3],
+            )
+            for i in range(8)
+        ]
+        eng = engines[ename](Model(cfg), params, slots=slots, max_len=max_len,
+                             mesh=mesh, **({} if ename == "dense" else
+                                           {"block_size": 16}))
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.time()
+        eng.run(max_ticks=400)
+        wall = time.time() - t0
+        assert all(r.status == "done" for r in reqs)
+        return eng, [r.out for r in reqs], wall
+
+    rows = []
+    base = {}
+    for ename, data, mdl, kv_bits in LEGS:
+        if (ename, kv_bits) not in base:
+            _, outs, _ = serve(ename, kv_bits, None)
+            base[(ename, kv_bits)] = outs
+        eng, outs, wall = serve(ename, kv_bits, make_smoke_mesh(data, mdl))
+        mismatches = sum(a != b for a, b in zip(outs, base[(ename, kv_bits)]))
+        total = eng.kv_cache_bytes()
+        shard = eng.kv_shard_bytes()
+        assert shard * mdl == total, (ename, mdl, shard, total)
+        # ring all-reduce: 2 row-parallel psums/layer of a (slots, d_model)
+        # f32 activation, 2*(m-1)/m bytes moved per device each
+        coll = int(
+            cfg0.n_layers * 2 * slots * cfg0.d_model * 4 * 2 * (mdl - 1) / mdl
+        )
+        leaked = eng.pool.pages_in_use if ename == "paged" else 0
+        assert leaked == 0, (ename, leaked)
+        rows.append({
+            "name": f"{ename}_{data}x{mdl}_kv{kv_bits}",
+            "wall_us": wall * 1e6,
+            "kv_shard_bytes": shard,
+            "coll_bytes_tick": coll,
+            "mismatches": mismatches,
+            "leaked_pages": leaked,
+            "kv_total_mb": total / 2**20,
+        })
+    print("JSON:" + json.dumps(rows), flush=True)
+
+
+def main():
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        **{_CHILD: "1"},
+    )
+    env.setdefault("PYTHONPATH", "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.table21_sharded_serving"],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"sharded child failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+        )
+    line = next(ln for ln in res.stdout.splitlines() if ln.startswith("JSON:"))
+    rows = json.loads(line[len("JSON:"):])
+
+    common.declare_directions(
+        lower_is_better=(
+            "kv_shard_bytes", "coll_bytes_tick", "mismatches", "leaked_pages",
+        ),
+    )
+    for row in rows:
+        assert row["mismatches"] == 0, row
+        assert row["leaked_pages"] == 0, row
+        common.emit(
+            f"table21/{row['name']}", row["wall_us"],
+            f"kv_shard_bytes={row['kv_shard_bytes']}"
+            f";coll_bytes_tick={row['coll_bytes_tick']}"
+            f";mismatches={row['mismatches']}"
+            f";leaked_pages={row['leaked_pages']}"
+            f";kv_total_mb={row['kv_total_mb']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    if os.environ.get(_CHILD):
+        _child()
+    else:
+        main()

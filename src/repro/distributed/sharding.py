@@ -7,6 +7,7 @@ every annotation is a no-op, so model code is mesh-agnostic.
 from __future__ import annotations
 
 import contextlib
+import logging
 import re
 import threading
 from typing import Any
@@ -15,6 +16,30 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
+_log = logging.getLogger(__name__)
+
+# (logical axis, physical rule) pairs whose divisibility fallback has already
+# been reported — each combination warns once per process, and the running
+# count is published as the ``dist.replicated_axes`` gauge so silent
+# replication (a sharding that quietly stopped sharding) shows up in telemetry.
+_replicated_seen: set[tuple[str, tuple[str, ...]]] = set()
+
+
+def _note_replicated(name: str, axes: tuple[str, ...], dim: int, size: int) -> None:
+    key = (name, axes)
+    if key in _replicated_seen:
+        return
+    _replicated_seen.add(key)
+    _log.warning(
+        "logical axis %r (size %d) is not divisible by mesh axes %s "
+        "(product %d) — replicating instead of sharding",
+        name, dim, "x".join(axes), size,
+    )
+    from repro import obs
+
+    obs.default().metrics.gauge("dist.replicated_axes", "axes").set(
+        len(_replicated_seen)
+    )
 
 # Default logical->physical table for the production meshes. `batch` folds the
 # pure-DP pod axis in when present.
@@ -79,11 +104,13 @@ def logical_to_spec(logical: tuple[str | None, ...], shape=None) -> P:
     for i, name in enumerate(logical):
         phys = rules.get(name) if name else None
         if phys is not None and shape is not None and mesh is not None:
-            axes = (phys,) if isinstance(phys, str) else phys
+            axes = (phys,) if isinstance(phys, str) else tuple(phys)
             size = 1
             for a in axes:
                 size *= mesh.shape[a]
             if shape[i] % size:
+                if size > 1:
+                    _note_replicated(name, axes, shape[i], size)
                 phys = None
         parts.append(phys)
     while parts and parts[-1] is None:
@@ -173,3 +200,55 @@ def param_shardings(mesh: Mesh, params: Any, rules: dict | None = None) -> Any:
 
 def replicated(mesh: Mesh, tree: Any) -> Any:
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def mesh_axes_for(name: str, size: int) -> tuple[Mesh | None, tuple[str, ...] | None]:
+    """Resolve a logical axis under the *current* rules to ``(mesh, physical
+    axes)`` — but only when the mapping would actually shard: the mesh-axis
+    product must exceed 1 and divide ``size``. Returns ``(None, None)``
+    otherwise (no rules installed, axis unmapped, trivial mesh, or the
+    divisibility fallback), mirroring :func:`logical_to_spec` so callers that
+    branch on it (the shard_mapped decode kernels) agree with the cache
+    shardings about whether an axis is split."""
+    rules, mesh = _rules(), _mesh()
+    if rules is None or mesh is None:
+        return None, None
+    phys = rules.get(name)
+    if phys is None:
+        return None, None
+    axes = (phys,) if isinstance(phys, str) else tuple(phys)
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+    if prod <= 1 or size % prod:
+        return None, None
+    return mesh, axes
+
+
+def kv_cache_shardings(mesh: Mesh, cache: Any, rules: dict | None = None) -> Any:
+    """NamedSharding pytree for a serving cache: every attention-KV leaf —
+    dense rows, packed codes, qparam planes, or paged pools — is sharded over
+    the KV-head axis (always the second-to-last dim, for fp ``hd``, packed
+    ``pd``, and group-plane ``ng`` tails alike); everything else (recurrent
+    Mamba/xLSTM state, conv tails) is replicated. Leaves whose KV-head count
+    doesn't divide the model-axis size fall back to replication via
+    :func:`logical_to_spec` (with the visibility warning)."""
+    with axis_rules(mesh, rules):
+
+        def node(tree: Any) -> Any:
+            if not isinstance(tree, dict):
+                return NamedSharding(mesh, P())
+            if any(k in tree for k in ("k", "k_q", "k_pages")):
+                return {
+                    name: NamedSharding(
+                        mesh,
+                        logical_to_spec(
+                            (None,) * (leaf.ndim - 2) + ("kv_heads", None),
+                            leaf.shape,
+                        ),
+                    )
+                    for name, leaf in tree.items()
+                }
+            return {k: node(v) for k, v in tree.items()}
+
+        return node(cache)

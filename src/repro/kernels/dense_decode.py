@@ -26,6 +26,11 @@ path.
 Grid: (B, K, n_chunks) with the chunk axis innermost; fp32 running
 (m, l, acc) streaming-softmax scratch in VMEM. GQA is native: each step
 computes all G query heads of one KV head's group against one chunk.
+
+Like the paged kernel, it is K-polymorphic and per-head independent, so the
+``shard_map`` dispatch in ``models/attention.py`` can run it unmodified on
+each mesh shard's KV-head slice (self-attn rows and append-free cross-attn
+KV alike) with bitwise-identical per-head outputs.
 """
 from __future__ import annotations
 

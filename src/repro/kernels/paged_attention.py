@@ -25,6 +25,13 @@ Grid: (B, K, max_blocks) with the block axis innermost; fp32 running
 (m, l, acc) streaming-softmax scratch in VMEM, blocks past ``lengths[b]``
 skipped via ``pl.when``. GQA is native: the grid walks KV heads and each
 step computes all G query heads of that group against one page.
+
+The kernel is polymorphic in K and per-head independent (the streaming
+softmax never crosses heads), which is exactly what makes it
+``shard_map``-compatible: under a KV-head-sharded mesh the dispatch in
+``models/attention.py`` hands each shard its head slice of ``q`` and the
+pool, and this kernel runs unmodified with a smaller K grid — per-head
+outputs are bitwise identical to the unsharded run, no cross-shard combine.
 """
 from __future__ import annotations
 

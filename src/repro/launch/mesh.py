@@ -13,5 +13,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over however many local devices exist (tests)."""
+    """Tiny mesh over however many local devices exist (tests, CPU-mesh
+    verification of the sharded serving path)."""
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data} model={model}")
+    have = len(jax.devices())
+    if data * model > have:
+        raise ValueError(
+            f"make_smoke_mesh(data={data}, model={model}) needs "
+            f"{data * model} devices but only {have} are visible. On a "
+            f"single-host CPU run, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model} "
+            f"in the environment *before* jax is imported to split the host "
+            f"into that many virtual devices."
+        )
     return jax.make_mesh((data, model), ("data", "model"))

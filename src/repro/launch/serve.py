@@ -93,6 +93,13 @@ def main():
     ap.add_argument("--paged-attn-impl", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="paged decode attention: Pallas kernel vs pure-JAX ref")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve sharded over a device mesh, e.g. '1x2' "
+                         "(data x model; KV heads and packed weights shard "
+                         "on the model axis). Needs data*model visible "
+                         "devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first. "
+                         "Token streams are identical to unsharded serving.")
     ap.add_argument("--trace-out", default=None,
                     help="write the request-lifecycle trace here as Chrome "
                          "trace-event JSON (open in Perfetto / chrome://tracing)")
@@ -114,13 +121,19 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     obs = Telemetry(tracing=not args.no_trace)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_smoke_mesh
+
+        data, _, mdl = args.mesh.partition("x")
+        mesh = make_smoke_mesh(int(data), int(mdl))
     kw = dict(
         slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, top_k=args.top_k,
         eos_id=args.eos_id, seed=args.seed, sync_every=args.sync_every,
         prefill_chunk=args.prefill_chunk, max_tick_tokens=args.max_tick_tokens,
         max_queue=args.max_queue, shed_policy=args.shed_policy,
-        obs=obs,
+        mesh=mesh, obs=obs,
     )
     if args.paged:
         engine = PagedEngine(
@@ -166,6 +179,9 @@ def main():
         obs.tracer.write(args.trace_out)
         print(f"trace: wrote {len(obs.tracer)} events to {args.trace_out}")
     print(f"kv cache bytes: {engine.kv_cache_bytes():,} (kv_bits={cfg.kv_bits})")
+    if mesh is not None:
+        print(f"kv bytes per shard: {engine.kv_shard_bytes():,} "
+              f"(mesh {args.mesh}, model axis {mesh.shape['model']}-way)")
     if engine.state_bytes():
         print(f"recurrent state bytes: {engine.state_bytes():,} "
               f"(state_bits={cfg.state_bits})")

@@ -7,16 +7,46 @@ so scores are computed per KV group without materialising repeated KV.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.kv_quant import kv_dequantize, kv_quantize
-from repro.distributed.sharding import lc
+from repro.distributed.sharding import lc, mesh_axes_for
 from repro.kernels import interpret_default
 from repro.models.common import ModelConfig, apply_rope, linear, linear_init
 from repro.obs import profiler
 
 NEG_INF = -1e30
+
+
+def _kv_shard_map(fn, kv_tree, mesh, axes, n_extra):
+    """Wrap a decode-attention dispatch in :func:`shard_map` over the KV-head
+    axis: each shard runs the *existing* kernel on its own head slice (heads
+    are embarrassingly parallel — the streaming-softmax combine never crosses
+    heads, so per-head outputs are bitwise identical to the unsharded run).
+    ``fn`` takes ``(q, kv_tree, *extras)``: ``q`` is ``(B, K, G, hd)`` with K
+    at dim 1; every KV cache leaf (codes, qparam planes, fp rows/pages alike)
+    carries K at dim -2; the ``n_extra`` trailing operands (block tables,
+    lengths) are replicated. Mesh axes not named in ``axes`` (e.g. ``data``)
+    are left unmapped, so batch-sharded inputs are gathered per shard by
+    GSPMD exactly as the unsharded kernel would see them.
+    ``check_rep=False``: Pallas calls don't carry replication-tracking rules.
+    """
+    qspec = P(None, axes)
+    kvspec = jax.tree.map(
+        lambda leaf: P(*(None,) * (leaf.ndim - 2), axes, None), kv_tree
+    )
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(qspec, kvspec) + (P(),) * n_extra,
+        out_specs=qspec,
+        check_rep=False,
+    )
 
 
 def attn_init(
@@ -96,7 +126,24 @@ def _paged_attention(q, pages, block_tables, lengths, cfg):
     interpreted off-TPU), pure-JAX gather reference otherwise (CPU tests).
     ``pages`` is the cache leaf-dict — fp {'k_pages','v_pages'} or quantized
     (+ scale/min planes); low-bit pages are dequantized *inside* the kernel
-    so only packed bytes stream from HBM."""
+    so only packed bytes stream from HBM.
+
+    Under installed ``axis_rules`` whose ``kv_heads`` axis shards this
+    config's K (see :func:`mesh_axes_for`), the dispatch runs inside
+    :func:`shard_map`: each shard executes the unmodified kernel over its
+    own KV-head slice of the pool (the kernel grid is per-(row, head), so a
+    smaller K is just a smaller grid) and its slice of ``q``; outputs
+    concatenate over heads with no cross-shard combine."""
+    mesh, axes = mesh_axes_for("kv_heads", q.shape[1])
+    if mesh is not None:
+        fn = _kv_shard_map(
+            partial(_paged_attention_local, cfg=cfg), pages, mesh, axes, 2
+        )
+        return fn(q, pages, block_tables, lengths)
+    return _paged_attention_local(q, pages, block_tables, lengths, cfg=cfg)
+
+
+def _paged_attention_local(q, pages, block_tables, lengths, *, cfg):
     impl = cfg.paged_attn_impl
     quant = cfg.kv_quant
     if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
@@ -134,7 +181,20 @@ def _dense_decode(q, rows, lengths, cfg):
     reference otherwise (CPU tests). ``rows`` is the already-written dense
     cache leaf-dict — fp {'k','v'} or quantized (+ scale/min planes); low-bit
     rows are dequantized *inside* the kernel so only packed codes and qparam
-    planes are read from HBM, never a full-precision ``(B, max_len)`` cache."""
+    planes are read from HBM, never a full-precision ``(B, max_len)`` cache.
+
+    KV-head sharding mirrors :func:`_paged_attention`: under rules that
+    split ``kv_heads``, each shard runs the unmodified kernel over its head
+    slice of the rows (self-attn and append-free cross-attn KV alike) via
+    :func:`shard_map`."""
+    mesh, axes = mesh_axes_for("kv_heads", q.shape[1])
+    if mesh is not None:
+        fn = _kv_shard_map(partial(_dense_decode_local, cfg=cfg), rows, mesh, axes, 1)
+        return fn(q, rows, lengths)
+    return _dense_decode_local(q, rows, lengths, cfg=cfg)
+
+
+def _dense_decode_local(q, rows, lengths, *, cfg):
     impl = cfg.dense_decode_impl
     quant = "k_q" in rows
     if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):

@@ -483,6 +483,13 @@ class Model:
         Families with recurrent mixers accept only T == 1 (see
         :attr:`supports_ragged_rows`); the engines fall back to whole-prompt
         admission for them and the unified step degenerates to decode.
+
+        Mesh-aware but mesh-agnostic in code: traced under installed
+        ``axis_rules`` (a sharded engine's ``_shard_ctx``) the ``lc``
+        constraints and the shard_mapped decode-attention dispatch partition
+        the step over the mesh — KV heads on ``model``, params per
+        ``PARAM_RULES`` — with no branching here; without rules every
+        annotation is a no-op and this is the single-device step.
         """
         sq = tokens.shape[1]
         if not self.supports_ragged_rows:
@@ -548,6 +555,11 @@ class Model:
         state at a fixed position. Harmless: the row's outputs are
         discarded, nothing else reads its slot, and the slot is reset
         before reuse.
+
+        Under installed ``axis_rules`` the whole scan traces sharded (each
+        tick's unified step partitions exactly as the per-tick path), while
+        the carried tokens/positions/done-flags and the sampler PRNG stay
+        replicated — segment streams are identical across mesh shapes.
         """
         row_ids = jnp.asarray(row_ids, jnp.int32)
         eos = jnp.int32(-1 if eos_id is None else eos_id)

@@ -73,6 +73,17 @@ the engine seed. Generation stops at ``max_new`` tokens, at cache
 capacity, or when ``eos_id`` is produced (the EOS token is appended to
 ``Request.out`` before the request is marked done).
 
+Sharded serving (``mesh=``): pass a :class:`jax.sharding.Mesh` (e.g. from
+``repro.launch.mesh.make_smoke_mesh``) and the engine becomes one engine
+over the mesh — params land per ``PARAM_RULES`` at construction, every
+attention-KV cache leaf is head-sharded on the ``model`` axis
+(``kv_cache_shardings``), the decode kernels run per KV-head shard through
+``shard_map`` (see ``models/attention.py``), and the page tables /
+free-list / refcounts stay replicated host-side numpy exactly as before.
+Scheduling, sampling keys, and preemption are untouched, so streams are
+token-identical to the single-device engine (``tests/test_sharded_serving``
+gates this on CPU meshes).
+
 Device-resident decode (``sync_every > 1``): between host syncs the
 scheduler hands the backend an all-decode **segment** —
 ``_decode_segment`` runs up to ``sync_every`` ticks inside one compiled
@@ -83,14 +94,22 @@ behavior exactly.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.sharding import (
+    axis_rules,
+    kv_cache_shardings,
+    param_shardings,
+)
 from repro.models.model import Model
 from repro.obs import Telemetry, profiler
 from repro.serve import sampler
@@ -248,16 +267,34 @@ class Engine:
         admit_lookahead: int = 8,
         max_queue: int = 0,
         shed_policy: str = "reject",
+        mesh: Mesh | None = None,
         obs: Telemetry | None = None,
     ):
         assert model.cfg.is_causal_lm, "serving engine targets decoder LMs"
         self.model = model
+        self.mesh = mesh
+        if mesh is not None:
+            # One engine over a mesh: packed quantized weights (and fp smoke
+            # params) land sharded per PARAM_RULES at construction — column-
+            # parallel projections split output heads/ff on 'model', row-
+            # parallel ones split the contraction dim, packed planes ride the
+            # same specs at ~8x lower collective cost than bf16.
+            params = jax.device_put(params, param_shardings(mesh, params))
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.temperature = float(temperature)
         self.eos_id = eos_id
         self.cache = self._make_cache()
+        self._cache_shardings = None
+        if mesh is not None:
+            # KV leaves (codes + qparam planes, dense rows and paged pools
+            # alike) are head-sharded on 'model'; recurrent state stays
+            # replicated. The same tree pins jit outputs and re-pins the
+            # cache after eager host-side writes, so the layout is stable
+            # across ticks (no resharding churn, one compilation per shape).
+            self._cache_shardings = kv_cache_shardings(mesh, self.cache)
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
         # one-slot template of the init cache state, written back on free
         self._fresh = self._make_fresh()
         self.obs = obs or Telemetry()
@@ -267,17 +304,26 @@ class Engine:
         )
         self._base_key = jax.random.PRNGKey(seed)
         self._sample_one = jax.jit(partial(sampler.sample, self._sampler_cfg))
-        self._unified = jax.jit(model.unified_step)
-        self._prefill = jax.jit(model.prefill)
-        self._segment = jax.jit(
-            partial(
-                model.decode_segment,
-                sample_fn=self._segment_sample,
-                eos_id=eos_id,
-                max_len=max_len,
-            ),
-            static_argnames=("n_ticks",),
+        seg_fn = partial(
+            model.decode_segment,
+            sample_fn=self._segment_sample,
+            eos_id=eos_id,
+            max_len=max_len,
         )
+        if mesh is None:
+            self._unified = jax.jit(model.unified_step)
+            self._segment = jax.jit(seg_fn, static_argnames=("n_ticks",))
+        else:
+            rep = NamedSharding(mesh, P())
+            self._unified = jax.jit(
+                model.unified_step, out_shardings=(rep, self._cache_shardings)
+            )
+            self._segment = jax.jit(
+                seg_fn,
+                static_argnames=("n_ticks",),
+                out_shardings=(self._cache_shardings, rep, rep, rep),
+            )
+        self._prefill = jax.jit(model.prefill)
         if prefill_chunk and not model.supports_ragged_rows:
             # recurrent mixers scan every input position (padding can't be
             # masked out of the state update), so chunked ragged rows are
@@ -320,6 +366,47 @@ class Engine:
             1, self.max_len, src_len=self.model.cfg.n_vision_tokens
         )
 
+    # -- mesh plumbing -----------------------------------------------------------
+
+    def _shard_ctx(self):
+        """Context active around every jitted model call: installs the
+        logical->physical axis rules (so ``lc`` constraints and the
+        shard_mapped decode kernels see the mesh at trace time). A no-op
+        single-device engine (``mesh=None``) stays byte-for-byte the old
+        code path."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return axis_rules(self.mesh)
+
+    def _pin_cache(self) -> None:
+        """Re-pin the cache to its construction-time shardings after an
+        eager host-driven update (prefill writes, slot resets, page CoW
+        copies) — eager ops can move leaves, and a drifting layout would
+        both recompile the tick and reassociate cross-shard math."""
+        if self._cache_shardings is not None:
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
+
+    def kv_shard_bytes(self) -> int:
+        """Largest per-device slice of the attention-KV cache in bytes —
+        equals :meth:`kv_cache_bytes` on a single device and shrinks as
+        1/shards when the KV heads are sharded over the mesh's ``model``
+        axis (qparam planes included; the benchmark's per-shard metric)."""
+        total = 0
+
+        def go(node):
+            nonlocal total
+            if isinstance(node, dict):
+                if _is_kv_node(node):
+                    for leaf in node.values():
+                        shard = leaf.sharding.shard_shape(leaf.shape)
+                        total += math.prod(shard) * leaf.dtype.itemsize
+                else:
+                    for v in node.values():
+                        go(v)
+
+        go(self.cache)
+        return total
+
     # -- admission hooks ---------------------------------------------------------
 
     def submit(self, req: Request) -> bool:
@@ -358,7 +445,7 @@ class Engine:
         sampling and the request lifecycle belong to the scheduler, so no
         counter is touched here."""
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-        with profiler.annotate("serve.prefill"):
+        with profiler.annotate("serve.prefill"), self._shard_ctx():
             logits, pcache = self._prefill(self.params, batch)
         self._write_prefill(slot, req, pcache)
         return np.asarray(logits[0, -1])
@@ -379,6 +466,7 @@ class Engine:
             return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
 
         self.cache = jax.tree.map(write, self.cache, pcache)
+        self._pin_cache()
 
     def kv_cache_bytes(self) -> int:
         """Attention KV-cache footprint in bytes (all periods, all slots),
@@ -441,6 +529,7 @@ class Engine:
             return jax.lax.dynamic_update_slice(full, fresh.astype(full.dtype), idx)
 
         self.cache = jax.tree.map(write, self.cache, self._fresh)
+        self._pin_cache()
         self.pos[slot] = 0
 
     # -- sampling ----------------------------------------------------------------
@@ -473,7 +562,7 @@ class Engine:
     ) -> jax.Array:
         """Run one jitted unified step over the whole pool; returns each
         row's last-valid-token logits, shape ``(slots, vocab)``."""
-        with profiler.annotate("serve.unified_step"):
+        with profiler.annotate("serve.unified_step"), self._shard_ctx():
             logits, self.cache = self._unified(
                 self.params,
                 self.cache,
@@ -499,7 +588,7 @@ class Engine:
         ticks with on-device sampling and done-row masking) and sync the
         whole segment back in one host materialization. Returns host
         ``(toks (n, B), valid (n, B), done (B,))``."""
-        with profiler.annotate("serve.decode_segment"):
+        with profiler.annotate("serve.decode_segment"), self._shard_ctx():
             self.cache, toks, valid, done = self._segment(
                 self.params, self.cache, tokens, self.sched.pos, done,
                 out_rem, self._row_ids(), n_ticks=n_ticks,

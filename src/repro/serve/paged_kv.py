@@ -40,6 +40,14 @@ token KV, two requests sharing a prompt prefix share byte-identical
 quantized pages. The decode kernel dequantizes inside VMEM, so pool capacity
 and decode HBM traffic both shrink by ~dtype_bits/kv_bits.
 
+Under a sharded engine (``mesh=`` on the engine) the *device* pool leaves —
+code pages and scale/min planes alike — are sharded over the KV-head axis
+(each device holds every page's slice of its own heads), while everything in
+:class:`PagedKVPool` (free list, refcounts, block tables, prefix cache)
+stays replicated host-side numpy: page ids are head-agnostic, so allocation,
+prefix reuse, copy-on-write, and preemption run unchanged and the block
+tables are broadcast to all devices each tick exactly as on one device.
+
 Stale data can never leak: a recycled page is only reachable through a block
 table after its new owner's prefill/decode has overwritten the positions it
 attends to, and positions beyond a row's live length are masked (same
@@ -431,6 +439,7 @@ class PagedEngine(Engine):
             return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)
 
         self.cache = _map_cache(self.cache, pcache, on_pages, on_dense)
+        self._pin_cache()
 
     def _reset_slot(self, slot: int) -> None:
         """Free the slot's pages and reset its dense (non-paged) cache rows.
@@ -458,6 +467,7 @@ class PagedEngine(Engine):
             return jax.lax.dynamic_update_slice(full, fresh.astype(full.dtype), idx)
 
         self.cache = _map_cache(self.cache, self._fresh, on_pages, on_dense)
+        self._pin_cache()
         self.pos[slot] = 0
 
     # -- unified tick ------------------------------------------------------------
@@ -487,14 +497,15 @@ class PagedEngine(Engine):
     def _unified_tick(
         self, tokens: np.ndarray, pos: np.ndarray, seq_lens: np.ndarray
     ) -> jax.Array:
-        logits, self.cache = self._unified(
-            self.params,
-            self.cache,
-            jnp.asarray(tokens),
-            jnp.asarray(pos),
-            jnp.asarray(seq_lens),
-            jnp.asarray(self.pool.block_tables),
-        )
+        with self._shard_ctx():
+            logits, self.cache = self._unified(
+                self.params,
+                self.cache,
+                jnp.asarray(tokens),
+                jnp.asarray(pos),
+                jnp.asarray(seq_lens),
+                jnp.asarray(self.pool.block_tables),
+            )
         return logits
 
     def _decode_segment(
@@ -505,7 +516,7 @@ class PagedEngine(Engine):
         are uploaded **once per segment** — the scheduler's ``_pre_tick``
         already reserved and made writable every page the segment can
         touch, so the tables are frozen for its whole duration."""
-        with profiler.annotate("serve.decode_segment"):
+        with profiler.annotate("serve.decode_segment"), self._shard_ctx():
             self.cache, toks, valid, done = self._segment(
                 self.params, self.cache, tokens, self.sched.pos, done,
                 out_rem, self._row_ids(),
@@ -523,6 +534,7 @@ class PagedEngine(Engine):
             lambda node, _: {k: v.at[:, dst].set(v[:, src]) for k, v in node.items()},
             lambda leaf, _: leaf,
         )
+        self._pin_cache()
 
     def _sync_stats(self) -> None:
         """Publish the pool gauges into the metrics registry. Called by the

@@ -14,7 +14,13 @@ Layering (after the PR-6 refactor):
   (``_can_admit`` / ``_on_admit`` / ``_prefill_into`` / ``_pre_tick`` /
   ``_unified_tick`` / ``_decode_segment`` / ``_reset_slot`` / ``_sample``
   / ``_sync_stats`` / ``_tick_penalty``). Dense-cache vs paged-pool
-  allocation is the only real divergence between them.
+  allocation is the only real divergence between them. The hooks are
+  mesh-agnostic by construction: a backend built with ``mesh=`` runs its
+  jitted calls over sharded params/KV (see ``serve/engine.py``), but every
+  value crossing this boundary — logits rows, segment token blocks, pool
+  bookkeeping — is host-side and replicated, so scheduling decisions
+  (admission, chunking, preemption, deadlines) are bitwise independent of
+  the mesh shape.
 
 Two admission modes:
 

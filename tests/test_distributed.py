@@ -1,10 +1,16 @@
-"""Multi-device distribution tests. Each test runs in a SUBPROCESS with
+"""Multi-device distribution tests. Tests that need real multi-device
+semantics run in a SUBPROCESS with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
-session keeps seeing 1 device (per task spec)."""
+session keeps seeing 1 device (per task spec); the PARAM_RULES spec tests
+run in-process on a trivial (1, 1) mesh, where every axis size divides and
+the produced PartitionSpecs are fully visible."""
 import os
 import subprocess
 import sys
 import textwrap
+
+import numpy as np
+import pytest
 
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -142,5 +148,140 @@ def test_prefetch_loader_shards_batches():
         assert out[3]["tokens"].sharding.spec[0] == ("data",) or \
                str(out[3]["tokens"].sharding.spec[0]) == "data"
         print("ok loader")
+        """
+    )
+
+
+# ---------------------------------------------------------------------------
+# PARAM_RULES edge cases (in-process, trivial mesh: specs fully visible)
+# ---------------------------------------------------------------------------
+
+
+def _specs(params):
+    """param_shardings -> normalized spec tree: each dim as a tuple of mesh
+    axis names (or None), so ('data',) and 'data' compare equal."""
+    import jax
+
+    from repro.distributed.sharding import param_shardings
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def norm(ns):
+        return tuple(
+            None if p is None else ((p,) if isinstance(p, str) else tuple(p))
+            for p in ns.spec
+        )
+
+    return jax.tree.map(norm, param_shardings(mesh, params))
+
+
+def test_param_rules_out_vs_in_fsdp_placement():
+    """Column-parallel (_OUT) linears put FSDP on the contraction dim and
+    'model' on the output dim; row-parallel (_IN) linears are the transpose —
+    and the packed-code 3-D leaves (w_packed + qparam planes) follow the
+    same placement with the group dim unsharded."""
+    params = {
+        "mixer": {
+            "wq": {"w": np.zeros((64, 128))},
+            "wo": {"w": np.zeros((128, 64))},
+        },
+        "mlp": {
+            "w1": {"w_packed": np.zeros((64, 4, 16)), "s": np.zeros((64, 4, 128))},
+            "w2": {"w_packed": np.zeros((128, 4, 8)), "s": np.zeros((128, 4, 64))},
+        },
+    }
+    sp = _specs(params)
+    assert sp["mixer"]["wq"]["w"] == (("data",), ("model",))
+    assert sp["mixer"]["wo"]["w"] == (("model",), ("data",))
+    assert sp["mlp"]["w1"]["w_packed"] == (("data",), None, ("model",))
+    assert sp["mlp"]["w1"]["s"] == (("data",), None, ("model",))
+    assert sp["mlp"]["w2"]["w_packed"] == (("model",), None, ("data",))
+    assert sp["mlp"]["w2"]["s"] == (("model",), None, ("data",))
+
+
+def test_param_rules_experts_padding_drops_model_tail():
+    """The `experts/` leading-axis branch: the expert axis owns 'model' (EP)
+    and model-mapped tail names (ff/qkv/heads) are dropped so no dim is
+    double-assigned; fsdp tails survive."""
+    params = {
+        "moe": {
+            "experts": {
+                "w1": {"w": np.zeros((8, 64, 128))},  # (E, d, ff)
+                "w2": {"w": np.zeros((8, 128, 64))},  # (E, ff, d)
+                "w3": {"b": np.zeros((8, 128))},  # (E, ff) bias
+            }
+        }
+    }
+    # path match needs '/experts/' between the group and the leaf
+    sp = _specs(params)["moe"]["experts"]
+    # _OUT: ("fsdp", "ff") -> expert pad + ff dropped
+    assert sp["w1"]["w"] == (("model",), ("data",))
+    # _IN: ("ff", "fsdp") -> ff dropped, fsdp (output dim) kept
+    assert sp["w2"]["w"] == (("model",), None, ("data",))
+    # _OUT bias: ("ff",) -> dropped under EP, expert pad only
+    assert sp["w3"]["b"] == (("model",),)
+
+
+def test_param_rules_truncation_keeps_trailing_axes():
+    """len(logical) > ndim truncates from the left: the rule's trailing
+    axes (the ones naming the leaf's actual dims) survive."""
+    params = {"blk": {"rec": np.zeros((4, 8, 8))}}  # rule is 4-long
+    sp = _specs(params)["blk"]["rec"]
+    # rec rule (None, 'heads', None, None) -> last 3: ('heads', None, None)
+    assert sp == (("model",),)
+
+
+def test_param_rules_unmatched_leaf_replicates():
+    sp = _specs({"odd": {"thing": np.zeros((3, 5, 7))}})
+    assert sp["odd"]["thing"] == ()
+
+
+# ---------------------------------------------------------------------------
+# Divisibility-fallback visibility + smoke-mesh validation
+# ---------------------------------------------------------------------------
+
+
+def test_make_smoke_mesh_validates_device_count():
+    import jax
+
+    from repro.launch.mesh import make_smoke_mesh
+
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_smoke_mesh(n + 1, 1)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_smoke_mesh(0, 1)
+
+
+def test_replication_fallback_warns_once_and_sets_gauge():
+    """An axis whose size doesn't divide the mesh product replicates — and
+    says so: one log warning per (axis, rule) pair and a running
+    `dist.replicated_axes` gauge in the process-wide obs registry."""
+    run_sub(
+        """
+        import logging
+        from repro import obs
+        from repro.distributed.sharding import axis_rules, logical_to_spec
+
+        records = []
+        class Grab(logging.Handler):
+            def emit(self, r):
+                records.append(r.getMessage())
+        logging.getLogger("repro.distributed.sharding").addHandler(Grab())
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with axis_rules(mesh):
+            s1 = logical_to_spec(("kv_heads", None), (6, 16))  # 6 % 4 -> fall back
+            s2 = logical_to_spec(("kv_heads", None), (6, 16))  # dup: no second warn
+            s3 = logical_to_spec(("ff", None), (10, 16))       # new pair: warns
+            s4 = logical_to_spec(("ff", None), (16, 16))       # divisible: silent
+        assert s1 == jax.sharding.PartitionSpec() and s1 == s2
+        assert s3 == jax.sharding.PartitionSpec()
+        assert s4[0] == ("model",), s4
+        assert len(records) == 2, records
+        assert "kv_heads" in records[0] and "replicating" in records[0]
+        g = obs.default().metrics.gauge("dist.replicated_axes")
+        assert g.value == 2, g.value
+        print("ok fallback")
         """
     )
